@@ -1,0 +1,42 @@
+"""Roofline report (deliverable g): reads the dry-run records and prints
+the three-term roofline per (arch x shape x mesh) with the dominant
+bottleneck, 6ND model-flops ratio, and roofline fraction."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def run() -> None:
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        emit("roofline_no_dryrun_records", 0.0,
+             "run_python_-m_repro.launch.dryrun_first")
+        return
+    print("# arch shape mesh | t_comp t_mem t_coll (ms) | dominant "
+          "| useful_ratio | roofline_frac | fits16GB")
+    for f in files:
+        rec = json.load(open(f))
+        r = rec["roofline"]
+        name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}" + \
+            (f"_{rec.get('variant')}" if rec.get("variant") and
+             rec.get("variant") != "baseline" else "")
+        emit(
+            f"roofline_{name}",
+            r["step_time_bound_s"],
+            f"comp={r['t_compute_s']*1e3:.2f}ms_"
+            f"mem={r['t_memory_s']*1e3:.2f}ms_"
+            f"coll={r['t_collective_s']*1e3:.2f}ms_"
+            f"dom={r['dominant']}_"
+            f"useful={r['useful_flops_ratio']:.2f}_"
+            f"frac={r['roofline_fraction']:.3f}_"
+            f"fits={rec['fits_hbm16']}")
+
+
+if __name__ == "__main__":
+    run()

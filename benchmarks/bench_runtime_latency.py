@@ -1,0 +1,71 @@
+"""Paper Figures 9 + 14: runtime latency on variable- and fixed-length
+requests, measured on the REAL engine (reduced-config model, CPU device).
+
+Fig 9 analogue  : sequential variable-length requests; the bucketed
+                  engine ("turbo") vs a fixed-max-padding runtime
+                  (pads every request to the 512 bucket — what a
+                  preprocess-per-shape runtime must do to avoid
+                  recompilation).
+Fig 14 analogue : fixed-length grid (batch x seqlen) engine latency.
+"""
+from __future__ import annotations
+
+import random
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.runtime import BucketLadder, InferenceEngine
+
+
+def run() -> None:
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.key(0))
+    ladder = BucketLadder(seq_buckets=(32, 64, 128, 256, 512),
+                          batch_buckets=(1, 2, 4, 8, 16, 32))
+    turbo = InferenceEngine(cfg, params, ladder=ladder)
+    fixed = InferenceEngine(cfg, params, ladder=BucketLadder(
+        seq_buckets=(512,), batch_buckets=(1, 2, 4, 8, 16, 32)))
+
+    rng = random.Random(0)
+    lengths = [rng.randint(5, 500) for _ in range(12)]
+    payloads = [[1] * n for n in lengths]
+
+    # warm both engines across their cells
+    for p in payloads:
+        turbo.classify([p])
+        fixed.classify([p])
+
+    t0 = time.perf_counter()
+    for p in payloads:
+        turbo.classify([p])
+    turbo_t = (time.perf_counter() - t0) / len(payloads)
+    t0 = time.perf_counter()
+    for p in payloads:
+        fixed.classify([p])
+    fixed_t = (time.perf_counter() - t0) / len(payloads)
+    emit("fig9_turbo_varlen_avg", turbo_t, "")
+    emit("fig9_fixedpad_varlen_avg", fixed_t,
+         f"turbo_speedup={fixed_t/turbo_t:.2f}x")
+
+    # Fig 14 grid (batch in {1, 8}, seq in {10, 100, 500})
+    for batch in (1, 8):
+        for seq in (10, 100, 500):
+            payload = [[1] * seq] * batch
+            turbo.classify(payload)      # ensure compiled
+            t0 = time.perf_counter()
+            for _ in range(3):
+                turbo.classify(payload)
+            dt = (time.perf_counter() - t0) / 3
+            emit(f"fig14_turbo_b{batch}_s{seq}", dt,
+                 f"per_request={dt/batch*1e3:.2f}ms")
+
+    emit("fig9_compiled_cells", 0.0,
+         f"turbo={turbo.compile_count}_of_{ladder.num_cells()}max")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""BERT-base-like encoder used by the allocator benchmarks (the paper's
+§6.2.2 case study). Plain python loop over layers so the jaxpr exposes
+every per-layer intermediate to the usage-record extractor."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+L = 12
+H = 12
+D = 768
+FF = 3072
+DH = D // H
+
+
+def init_bert_params(key) -> Dict:
+    ks = jax.random.split(key, L * 6 + 1)
+    layers = []
+    for i in range(L):
+        k = ks[i * 6:(i + 1) * 6]
+        layers.append({
+            "wqkv": jax.random.normal(k[0], (D, 3 * D)) * 0.02,
+            "wo": jax.random.normal(k[1], (D, D)) * 0.02,
+            "w1": jax.random.normal(k[2], (D, FF)) * 0.02,
+            "w2": jax.random.normal(k[3], (FF, D)) * 0.02,
+            "g1": jnp.ones((D,)), "b1": jnp.zeros((D,)),
+            "g2": jnp.ones((D,)), "b2": jnp.zeros((D,)),
+        })
+    return {"layers": layers,
+            "embed": jax.random.normal(ks[-1], (30522, D)) * 0.02}
+
+
+def _ln(x, g, b):
+    m = jnp.mean(x, -1, keepdims=True)
+    v = jnp.mean(x * x, -1, keepdims=True) - m * m
+    return (x - m) * jax.lax.rsqrt(v + 1e-6) * g + b
+
+
+def bert_encoder(params, tokens):
+    """tokens: (B, S) -> (B, S, D). Unrolled 12-layer BERT encoder."""
+    h = jnp.take(params["embed"], tokens, axis=0)
+    b, s, _ = h.shape
+    for lyr in params["layers"]:
+        qkv = h @ lyr["wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, s, H, DH)
+        k = k.reshape(b, s, H, DH)
+        v = v.reshape(b, s, H, DH)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (DH ** 0.5)
+        w = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(b, s, D)
+        h = _ln(h + attn @ lyr["wo"], lyr["g1"], lyr["b1"])
+        ff = jax.nn.gelu(h @ lyr["w1"]) @ lyr["w2"]
+        h = _ln(h + ff, lyr["g2"], lyr["b2"])
+    return h

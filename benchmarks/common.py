@@ -1,0 +1,31 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+
+def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 2
+           ) -> float:
+    """Median wall-time of a jitted callable, in seconds."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    ROWS.append((name, seconds * 1e6, derived))
+    print(f"{name},{seconds*1e6:.2f},{derived}", flush=True)

@@ -1,0 +1,50 @@
+"""Benchmark aggregator: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks.common.emit).
+
+  PYTHONPATH=src python -m benchmarks.run              # all
+  PYTHONPATH=src python -m benchmarks.run scheduler    # one suite
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+SUITES = [
+    ("batch_reduction", "benchmarks.bench_batch_reduction",
+     "Table 2 / Fig 5 — fused batch-reduction kernels"),
+    ("scheduler", "benchmarks.bench_scheduler",
+     "Fig 8 — DP batch scheduler"),
+    ("allocator", "benchmarks.bench_allocator",
+     "Figs 11/12/13 — sequence-length-aware allocator"),
+    ("serving", "benchmarks.bench_serving",
+     "Figs 15/16, Tables 4/5 — serving throughput"),
+    ("runtime_latency", "benchmarks.bench_runtime_latency",
+     "Figs 9/14 — engine latency"),
+    ("roofline", "benchmarks.bench_roofline",
+     "Roofline report from the multi-pod dry-run"),
+]
+
+
+def main() -> None:
+    want = sys.argv[1] if len(sys.argv) > 1 else None
+    failures = []
+    print("name,us_per_call,derived")
+    for key, module, desc in SUITES:
+        if want and want != key:
+            continue
+        print(f"# === {key}: {desc} ===", flush=True)
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run()
+        except Exception as e:   # noqa: BLE001
+            failures.append((key, e))
+            traceback.print_exc()
+    if failures:
+        print(f"# {len(failures)} suite(s) FAILED: "
+              f"{[k for k, _ in failures]}")
+        raise SystemExit(1)
+    print("# all benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""The paper's two algorithms, standalone and inspectable:
+
+1. Algorithm 1 on a real computation graph: trace a 12-layer BERT-like
+   encoder, extract tensor lifetimes from the jaxpr, plan chunk offsets,
+   and watch the footprint track the request length (vs a caching
+   allocator that ratchets).
+2. Algorithm 2 on the paper's Fig. 8 example: lengths 17/18/52/63/77,
+   DP split beats one-big-batch and no-batching.
+
+    PYTHONPATH=src python examples/allocator_scheduler_demo.py
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bert_like import bert_encoder, init_bert_params
+from repro.core import (AnalyticCostModel, CachingAllocator,
+                        SequenceAwareAllocator, dp_schedule,
+                        naive_schedule, nobatch_schedule, records_for_fn,
+                        validate_plan)
+
+
+def main() -> None:
+    params = init_bert_params(jax.random.key(0))
+    turbo = SequenceAwareAllocator()
+    caching = CachingAllocator()
+
+    print("== Algorithm 1: sequence-length-aware allocation ==")
+    print(f"{'len':>5} {'records':>8} {'chunks':>7} {'turbo MB':>9} "
+          f"{'caching MB':>11}")
+    for seq in (64, 200, 480, 240, 64):
+        recs = records_for_fn(
+            lambda t: bert_encoder(params, t),
+            jnp.ones((1, seq), jnp.int32), min_size=4096)
+        plan = turbo.plan(recs)
+        validate_plan(recs, plan)
+        caching.run_inference(recs)
+        print(f"{seq:5d} {len(recs):8d} {len(plan.chunks):7d} "
+              f"{turbo.footprint/1e6:9.2f} {caching.footprint/1e6:11.2f}")
+    print("-> turbo releases chunks when requests shrink; "
+          "the caching allocator never does.\n")
+
+    print("== Algorithm 2: DP batch scheduling (paper Fig. 8) ==")
+    cm = AnalyticCostModel(flops_per_token=2 * 110e6, bytes_per_token=2e4,
+                           weight_bytes=2.2e8, overhead=1.2e-3,
+                           peak_flops=6.5e12, hbm_bw=336e9)
+    lengths = [17, 18, 52, 63, 77]
+    for name, plan in [
+            ("dp", dp_schedule(lengths, cm)),
+            ("naive", naive_schedule(lengths, cm)),
+            ("nobatch", nobatch_schedule(lengths, cm))]:
+        batches = [[lengths[i] for i in b] for b in plan.batches]
+        print(f"{name:8s} cost={plan.total_cost*1e3:7.2f} ms  "
+              f"batches={batches}")
+    dp = dp_schedule(lengths, cm)
+    nv = naive_schedule(lengths, cm)
+    print(f"-> DP improves throughput by "
+          f"{(nv.total_cost/dp.total_cost-1)*100:.0f}% over one padded "
+          f"batch on this example.")
+
+
+if __name__ == "__main__":
+    main()

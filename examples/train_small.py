@@ -1,0 +1,70 @@
+"""Training example with fault tolerance: trains a reduced-config model for
+a few hundred steps with periodic async checkpoints, then simulates a node
+failure and auto-resumes — the restart reproduces the uninterrupted
+trajectory bit-for-bit (deterministic per-step data keys).
+
+    PYTHONPATH=src python examples/train_small.py [--arch zamba2-1.2b]
+"""
+import argparse
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.training import OptimizerConfig, TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    workdir = tempfile.mkdtemp(prefix="turbo_train_")
+    tc = TrainConfig(
+        optimizer=OptimizerConfig(name="adamw", learning_rate=1e-3),
+        compute_dtype="float32", grad_accum=2,
+        checkpoint_dir=workdir, checkpoint_every=50, log_every=20)
+
+    def log(step, m):
+        print(f"  step {step:4d}  loss={m['loss']:.4f} "
+              f"ppl={m['perplexity']:.1f} gnorm={m['grad_norm']:.2f}",
+              flush=True)
+
+    print(f"training reduced {args.arch} "
+          f"({cfg.num_layers}L d={cfg.d_model}) for {args.steps} steps")
+    t0 = time.time()
+    trainer = Trainer(cfg, tc, batch_size=args.batch, seq_len=args.seq,
+                      seed=0, fail_at_step=args.steps // 2)
+    try:
+        trainer.run(args.steps, on_metrics=log)
+    except RuntimeError as e:
+        print(f"!! {e} — simulating node failure; restarting from the "
+              f"latest checkpoint ...")
+
+    resumed = Trainer(cfg, tc, batch_size=args.batch, seq_len=args.seq,
+                      seed=0)
+    state = resumed.run(args.steps, on_metrics=log)
+    print(f"finished at step {int(state['step'])} "
+          f"in {time.time()-t0:.1f}s (incl. crash+resume)")
+
+    # verify determinism vs an uninterrupted run of the last 20 steps
+    probe = Trainer(cfg, TrainConfig(
+        optimizer=tc.optimizer, compute_dtype="float32",
+        grad_accum=2), batch_size=args.batch, seq_len=args.seq, seed=0)
+    ref = probe.run(args.steps)
+    same = all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(ref["params"]),
+                               jax.tree.leaves(state["params"])))
+    print("crash/resume trajectory bitwise identical:", same)
+    shutil.rmtree(workdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

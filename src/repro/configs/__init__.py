@@ -1,0 +1,47 @@
+"""Registry of assigned architectures (``--arch <id>``)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (ALL_SHAPES, SHAPES, SMOKE_SHAPE, ModelConfig,
+                                MoEConfig, ShapeConfig, SSMConfig,
+                                reduce_for_smoke, shapes_for)
+
+_MODULES = {
+    "qwen3-32b": "qwen3_32b",
+    "llama3-405b": "llama3_405b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "starcoder2-15b": "starcoder2_15b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "musicgen-large": "musicgen_large",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.smoke_config()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+__all__ = [
+    "ALL_SHAPES", "SHAPES", "SMOKE_SHAPE", "ARCH_IDS", "ModelConfig",
+    "MoEConfig", "SSMConfig", "ShapeConfig", "get_config",
+    "get_smoke_config", "all_configs", "reduce_for_smoke", "shapes_for",
+]

@@ -1,0 +1,36 @@
+"""The paper's three contributions as composable modules:
+
+C1 — batch-reduction kernels live in ``repro.kernels`` (Pallas);
+C2 — ``allocator`` (Algorithm 1) + ``usage_records`` (jaxpr lifetimes)
+     + ``allocator_baselines`` (caching/GSOC comparisons);
+C3 — ``scheduler`` (Algorithm 2 DP batching) + ``cost_model`` +
+     ``serving`` (MQ/cache/SLO loop) + ``simulator`` (Poisson DES).
+"""
+from repro.core.allocator import (AllocationPlan, Chunk,
+                                  SequenceAwareAllocator, TensorUsageRecord,
+                                  find_gap_from_chunk, validate_plan)
+from repro.core.allocator_baselines import CachingAllocator, GSOCAllocator
+from repro.core.cost_model import (AnalyticCostModel, BucketedCostModel,
+                                   CostModel, TableCostModel)
+from repro.core.scheduler import (BatchPlan, brute_force_schedule,
+                                  dp_schedule, naive_schedule,
+                                  nobatch_schedule)
+from repro.core.serving import (MessageQueue, Request, ResponseCache,
+                                Response, ServingConfig, ServingSystem)
+from repro.core.simulator import (SimConfig, SimResult, Workload,
+                                  critical_point, simulate,
+                                  throughput_curve)
+from repro.core.usage_records import (dedup_repeated_structure,
+                                      records_for_fn, records_from_jaxpr)
+
+__all__ = [
+    "AllocationPlan", "AnalyticCostModel", "BatchPlan", "BucketedCostModel",
+    "CachingAllocator", "Chunk", "CostModel", "GSOCAllocator",
+    "MessageQueue", "Request", "Response", "ResponseCache",
+    "SequenceAwareAllocator", "ServingConfig", "ServingSystem", "SimConfig",
+    "SimResult", "TableCostModel", "TensorUsageRecord", "Workload",
+    "brute_force_schedule", "critical_point", "dedup_repeated_structure",
+    "dp_schedule", "find_gap_from_chunk", "naive_schedule",
+    "nobatch_schedule", "records_for_fn", "records_from_jaxpr", "simulate",
+    "throughput_curve", "validate_plan",
+]

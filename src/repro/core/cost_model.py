@@ -1,0 +1,155 @@
+"""Cost models backing the DP batch scheduler's ``cached_cost`` table.
+
+Semantics follow the paper's Eq. 2: ``cached_cost[len][batch]`` is the
+*per-request* cost of running one inference at (len, batch); the latency of
+a batch of size b is ``cached_cost[len][b] * b``.
+
+Two implementations:
+
+- :class:`TableCostModel` — built by a warm-up phase that measures the real
+  engine "under all possible batch sizes and sequence lengths" (§5), with
+  bilinear interpolation in (log len, batch) for unseen points and lazy
+  refinement from live measurements.
+- :class:`AnalyticCostModel` — v5e roofline model (compute/memory terms +
+  fixed launch overhead) for a :class:`ModelConfig`; used when no hardware
+  is available to warm up on and to seed simulations.
+"""
+from __future__ import annotations
+
+import bisect
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW_PER_LINK = 50e9
+
+
+class CostModel:
+    def latency(self, seq_len: int, batch: int) -> float:
+        raise NotImplementedError
+
+    def per_request(self, seq_len: int, batch: int) -> float:
+        return self.latency(seq_len, batch) / max(batch, 1)
+
+
+@dataclass
+class AnalyticCostModel(CostModel):
+    """Roofline latency for one inference step over a padded batch."""
+    flops_per_token: float            # ~2 * active params (fwd)
+    bytes_per_token: float            # activation traffic per token
+    weight_bytes: float               # parameter bytes read per pass
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    overhead: float = 50e-6           # dispatch/launch overhead (s)
+    chips: int = 1
+
+    @classmethod
+    def for_model(cls, cfg: ModelConfig, chips: int = 1,
+                  dtype_bytes: int = 2) -> "AnalyticCostModel":
+        n_active = cfg.active_param_count()
+        return cls(
+            flops_per_token=2.0 * n_active,
+            bytes_per_token=2.0 * cfg.d_model * cfg.num_layers * dtype_bytes,
+            weight_bytes=float(n_active * dtype_bytes),
+            chips=chips)
+
+    def latency(self, seq_len: int, batch: int) -> float:
+        tokens = seq_len * batch
+        compute = self.flops_per_token * tokens / \
+            (self.peak_flops * self.chips)
+        memory = (self.weight_bytes + self.bytes_per_token * tokens) / \
+            (self.hbm_bw * self.chips)
+        return max(compute, memory) + self.overhead
+
+
+class TableCostModel(CostModel):
+    """Warm-up table + bilinear interpolation (paper §5, both strategies:
+    dense warm-up for small parameter spaces, sampled+interpolated for
+    large ones; `observe` implements the lazy live refinement)."""
+
+    def __init__(self, table: Dict[Tuple[int, int], float]) -> None:
+        if not table:
+            raise ValueError("empty cost table")
+        self.table = dict(table)
+        self._rebuild()
+
+    def _rebuild(self) -> None:
+        self.lengths = sorted({k[0] for k in self.table})
+        self.batches = sorted({k[1] for k in self.table})
+
+    @classmethod
+    def warmup(cls, measure, lengths: Sequence[int],
+               batches: Sequence[int]) -> "TableCostModel":
+        """measure(seq_len, batch) -> seconds (full-batch latency)."""
+        table = {(l, b): float(measure(l, b))
+                 for l in lengths for b in batches}
+        return cls(table)
+
+    def observe(self, seq_len: int, batch: int, latency: float,
+                ema: float = 0.3) -> None:
+        key = (seq_len, batch)
+        if key in self.table:
+            self.table[key] = (1 - ema) * self.table[key] + ema * latency
+        else:
+            self.table[key] = latency
+            self._rebuild()
+
+    def _nearest(self, grid: List[int], x: int) -> Tuple[int, int, float]:
+        """Bracketing grid points and interpolation weight."""
+        i = bisect.bisect_left(grid, x)
+        if i == 0:
+            return grid[0], grid[0], 0.0
+        if i >= len(grid):
+            return grid[-1], grid[-1], 0.0
+        lo, hi = grid[i - 1], grid[i]
+        if lo == hi:
+            return lo, hi, 0.0
+        w = (x - lo) / (hi - lo)
+        return lo, hi, w
+
+    def latency(self, seq_len: int, batch: int) -> float:
+        l0, l1, wl = self._nearest(self.lengths, seq_len)
+        b0, b1, wb = self._nearest(self.batches, batch)
+
+        def at(l, b):
+            if (l, b) in self.table:
+                return self.table[(l, b)]
+            # fall back to nearest available in batch dim
+            cands = [bb for bb in self.batches if (l, bb) in self.table]
+            bb = min(cands, key=lambda x: abs(x - b))
+            return self.table[(l, bb)] * (b / bb)
+        v00, v01 = at(l0, b0), at(l0, b1)
+        v10, v11 = at(l1, b0), at(l1, b1)
+        v0 = v00 * (1 - wb) + v01 * wb
+        v1 = v10 * (1 - wb) + v11 * wb
+        lat = v0 * (1 - wl) + v1 * wl
+        # extrapolate beyond grid linearly in tokens
+        if seq_len > self.lengths[-1]:
+            lat *= seq_len / self.lengths[-1]
+        if batch > self.batches[-1]:
+            lat *= batch / self.batches[-1]
+        return lat
+
+
+@dataclass
+class BucketedCostModel(CostModel):
+    """Beyond-paper: accounts for TPU length-bucketing — the engine pads
+    seq_len up to the next bucket, so cost is a step function of length.
+    Wrapping the base model with the *actual executed* shape makes the DP
+    scheduler bucket-aware (it then prefers batches that share a bucket)."""
+    base: CostModel
+    buckets: Sequence[int] = (32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+    def bucket_of(self, seq_len: int) -> int:
+        for b in self.buckets:
+            if seq_len <= b:
+                return b
+        return self.buckets[-1]
+
+    def latency(self, seq_len: int, batch: int) -> float:
+        return self.base.latency(self.bucket_of(seq_len), batch)

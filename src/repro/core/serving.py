@@ -1,0 +1,192 @@
+"""Serving framework (paper §5): message queue, response cache, batch
+scheduler triggering (hungry/lazy), SLO guard.
+
+The framework is runtime-agnostic: it drives any ``execute(batch) ->
+results`` callable — the real TPU/CPU engine in production
+(`repro.runtime.engine`) or a virtual-clock executor in the simulator
+(`repro.core.simulator`).
+"""
+from __future__ import annotations
+
+import collections
+import hashlib
+import time
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
+                    Tuple)
+
+from repro.core.cost_model import CostModel
+from repro.core.scheduler import (BatchPlan, dp_schedule, naive_schedule,
+                                  nobatch_schedule)
+
+
+@dataclass
+class Request:
+    req_id: int
+    seq_len: int
+    arrival_time: float
+    payload: Any = None               # e.g. token ids
+
+    def cache_key(self) -> str:
+        h = hashlib.sha1(repr(self.payload).encode()).hexdigest()
+        return f"{self.seq_len}:{h}"
+
+
+@dataclass
+class Response:
+    req_id: int
+    arrival_time: float
+    finish_time: float
+    batch_size: int
+    padded_len: int
+    result: Any = None
+    cached: bool = False
+
+    @property
+    def latency(self) -> float:
+        return self.finish_time - self.arrival_time
+
+
+class MessageQueue:
+    def __init__(self) -> None:
+        self._q: Deque[Request] = collections.deque()
+
+    def push(self, req: Request) -> None:
+        self._q.append(req)
+
+    def pop_all(self) -> List[Request]:
+        out = list(self._q)
+        self._q.clear()
+        return out
+
+    def peek_oldest(self) -> Optional[Request]:
+        return self._q[0] if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class ResponseCache:
+    """Clipper-style result memoization for frequent identical requests."""
+
+    def __init__(self, capacity: int = 4096) -> None:
+        self.capacity = capacity
+        self._store: "collections.OrderedDict[str, Any]" = \
+            collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str):
+        if key in self._store:
+            self._store.move_to_end(key)
+            self.hits += 1
+            return self._store[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: str, value: Any) -> None:
+        self._store[key] = value
+        self._store.move_to_end(key)
+        while len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+
+
+def plan_for_policy(policy: str, lengths: Sequence[int], cost: CostModel,
+                    max_batch_size: Optional[int]) -> BatchPlan:
+    if policy == "nobatch":
+        return nobatch_schedule(lengths, cost)
+    if policy == "naive":
+        return naive_schedule(lengths, cost, max_batch_size)
+    if policy == "dp":
+        return dp_schedule(lengths, cost, max_batch_size)
+    raise ValueError(f"unknown policy {policy!r}")
+
+
+@dataclass
+class ServingConfig:
+    policy: str = "dp"                  # nobatch | naive | dp
+    strategy: str = "hungry"            # hungry | lazy
+    max_batch_size: int = 20
+    lazy_timeout: float = 5e-3          # lazy: flush after this wait
+    slo_latency: Optional[float] = None  # start early if at risk (§5)
+    enable_cache: bool = False
+
+
+class ServingSystem:
+    """Real-time serving loop over a live engine.
+
+    ``execute(requests, padded_len) -> list[result]`` runs one batch.
+    ``clock()`` returns the current time (wall clock by default; the
+    simulator swaps in a virtual clock).
+    """
+
+    def __init__(self, execute: Callable[[List[Request], int], List[Any]],
+                 cost_model: CostModel,
+                 config: ServingConfig = ServingConfig(),
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        self.execute = execute
+        self.cost = cost_model
+        self.config = config
+        self.clock = clock
+        self.mq = MessageQueue()
+        self.cache = ResponseCache()
+        self.responses: List[Response] = []
+
+    def submit(self, req: Request) -> Optional[Response]:
+        if self.config.enable_cache:
+            cached = self.cache.get(req.cache_key())
+            if cached is not None:
+                resp = Response(req.req_id, req.arrival_time, self.clock(),
+                                1, req.seq_len, cached, cached=True)
+                self.responses.append(resp)
+                return resp
+        self.mq.push(req)
+        return None
+
+    def should_flush(self) -> bool:
+        """Lazy-strategy trigger (§5): batch full, timeout, or SLO risk."""
+        if len(self.mq) == 0:
+            return False
+        if self.config.strategy == "hungry":
+            return True
+        if len(self.mq) >= self.config.max_batch_size:
+            return True
+        oldest = self.mq.peek_oldest()
+        now = self.clock()
+        if now - oldest.arrival_time >= self.config.lazy_timeout:
+            return True
+        if self.config.slo_latency is not None:
+            est = self.cost.latency(oldest.seq_len, len(self.mq))
+            if (now - oldest.arrival_time) + est > \
+                    self.config.slo_latency / 2:
+                return True
+        return False
+
+    def step(self) -> List[Response]:
+        """Plan over the queue and execute the planned batches."""
+        if not self.should_flush():
+            return []
+        reqs = self.mq.pop_all()
+        lengths = [r.seq_len for r in reqs]
+        plan = plan_for_policy(self.config.policy, lengths, self.cost,
+                               self.config.max_batch_size)
+        out: List[Response] = []
+        for batch_idx in plan.batches:
+            batch = [reqs[i] for i in batch_idx]
+            padded = max(r.seq_len for r in batch)
+            results = self.execute(batch, padded)
+            now = self.clock()
+            for r, res in zip(batch, results):
+                resp = Response(r.req_id, r.arrival_time, now, len(batch),
+                                padded, res)
+                out.append(resp)
+                if self.config.enable_cache:
+                    self.cache.put(r.cache_key(), res)
+        self.responses.extend(out)
+        return out
+
+    def drain(self) -> List[Response]:
+        out = []
+        while len(self.mq):
+            out.extend(self.step())
+        return out

@@ -1,0 +1,175 @@
+"""Discrete-event serving simulator (paper §6.3: Figs. 15/16, Tables 4/5).
+
+Requests arrive with Poisson inter-arrival times and uniform random
+lengths; a single-GPU (here: single-accelerator) server executes batches
+back-to-back, with service time given by a CostModel. Policies: nobatch /
+naive / dp — exactly the four systems in the paper once combined with the
+PyTorch-vs-Turbo cost models.
+
+Beyond-paper scale features exercised here: straggler injection +
+timeout-requeue mitigation, and multi-replica serving with a shared queue
+(the Nexus-style upper-level balancer the paper defers to).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cost_model import CostModel
+from repro.core.serving import Request, Response, plan_for_policy
+
+
+@dataclass
+class Workload:
+    rate: float                       # requests / second
+    duration: float                   # seconds of arrivals
+    len_min: int = 2
+    len_max: int = 100
+    seed: int = 0
+
+    def generate(self) -> List[Request]:
+        rng = random.Random(self.seed)
+        t = 0.0
+        out = []
+        i = 0
+        while True:
+            t += rng.expovariate(self.rate)
+            if t > self.duration:
+                break
+            out.append(Request(i, rng.randint(self.len_min, self.len_max),
+                               t))
+            i += 1
+        return out
+
+
+@dataclass
+class SimConfig:
+    policy: str = "dp"
+    max_batch_size: int = 20
+    num_replicas: int = 1
+    # straggler model: with prob p a batch takes x`slowdown`; if mitigation
+    # is on, a straggling batch is cut off at `timeout_factor` x expected
+    # and re-executed (requeue), modelling replica failover.
+    straggler_prob: float = 0.0
+    straggler_slowdown: float = 5.0
+    mitigate_stragglers: bool = False
+    straggler_timeout_factor: float = 2.0
+    seed: int = 0
+
+
+@dataclass
+class SimResult:
+    responses: List[Response]
+    duration: float
+    offered: int                     # arrivals within the window
+
+    @property
+    def throughput(self) -> float:
+        """Responses completed WITHIN the arrival window (paper Fig 15/16
+        y-axis): an overloaded server plateaus at its service capacity."""
+        done = sum(1 for r in self.responses
+                   if r.finish_time <= self.duration)
+        return done / self.duration
+
+    @property
+    def unstable(self) -> bool:
+        """Critical point (§6.3): stable iff serving throughput keeps up
+        with request throughput."""
+        return self.throughput < 0.95 * self.offered / self.duration
+
+    def latency_stats(self) -> Tuple[float, float, float]:
+        if not self.responses:
+            return (math.inf, math.inf, math.inf)
+        lats = [r.latency for r in self.responses]
+        return (sum(lats) / len(lats), min(lats), max(lats))
+
+
+def simulate(workload: Workload, cost: CostModel,
+             config: SimConfig = SimConfig()) -> SimResult:
+    """Hungry-strategy serving: whenever a replica is idle and the queue is
+    non-empty, plan over the current queue and execute the plan's batches."""
+    arrivals = workload.generate()
+    rng = random.Random(config.seed + 1)
+    queue: List[Request] = []
+    responses: List[Response] = []
+    # replica free times
+    free_at = [0.0] * config.num_replicas
+    ai = 0
+    n = len(arrivals)
+    horizon = workload.duration * 3 + 1.0
+
+    def service_time(batch_len: int, padded: int) -> float:
+        base = cost.latency(padded, batch_len)
+        if config.straggler_prob and rng.random() < config.straggler_prob:
+            slow = base * config.straggler_slowdown
+            if config.mitigate_stragglers:
+                # detect at timeout, requeue on a healthy replica
+                return base * config.straggler_timeout_factor + base
+            return slow
+        return base
+
+    while True:
+        r = min(range(config.num_replicas), key=lambda i: free_at[i])
+        now = free_at[r]
+        # admit arrivals up to `now`
+        while ai < n and arrivals[ai].arrival_time <= now:
+            queue.append(arrivals[ai])
+            ai += 1
+        if not queue:
+            if ai >= n:
+                break
+            # idle until next arrival
+            free_at[r] = max(now, arrivals[ai].arrival_time)
+            continue
+        if now > horizon:
+            break   # saturated — latency is effectively +inf
+        lengths = [q.seq_len for q in queue]
+        plan = plan_for_policy(config.policy, lengths, cost,
+                               config.max_batch_size)
+        reqs = list(queue)
+        queue.clear()
+        t = now
+        for batch_idx in plan.batches:
+            batch = [reqs[i] for i in batch_idx]
+            padded = max(b.seq_len for b in batch)
+            t += service_time(len(batch), padded)
+            for b in batch:
+                responses.append(Response(b.req_id, b.arrival_time, t,
+                                          len(batch), padded))
+        free_at[r] = t
+
+    return SimResult(responses, workload.duration, n)
+
+
+def throughput_curve(rates: Sequence[float], cost: CostModel,
+                     config: SimConfig, duration: float = 20.0,
+                     len_min: int = 2, len_max: int = 100,
+                     seed: int = 0) -> List[Dict[str, float]]:
+    """Offered-load sweep -> (resp/sec, latency stats, stable?) per rate.
+    The 'critical point' (paper Fig. 15) is the largest stable rate."""
+    out = []
+    for rate in rates:
+        wl = Workload(rate=rate, duration=duration, len_min=len_min,
+                      len_max=len_max, seed=seed)
+        res = simulate(wl, cost, config)
+        avg, lo, hi = res.latency_stats()
+        out.append({
+            "rate": rate,
+            "throughput": res.throughput,
+            "avg_latency": avg, "min_latency": lo, "max_latency": hi,
+            "stable": 0.0 if res.unstable else 1.0,
+        })
+    return out
+
+
+def critical_point(rates: Sequence[float], cost: CostModel,
+                   config: SimConfig, **kw) -> float:
+    """Largest offered rate the system sustains (throughput == rate)."""
+    best = 0.0
+    for row in throughput_curve(rates, cost, config, **kw):
+        if row["stable"]:
+            best = max(best, row["rate"])
+    return best

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (LengthDistribution, RequestGenerator,
+                                 TokenStream)
+
+__all__ = ["LengthDistribution", "RequestGenerator", "TokenStream"]

@@ -1,0 +1,75 @@
+"""Data pipeline: synthetic token streams (training) and request streams
+(serving), matching the paper's workloads: "randomly generated texts whose
+lengths are uniformly distributed from 5 to 500" with Poisson inter-arrival
+times (§6.2.1, §6.3).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.serving import Request
+from repro.models.io import synthetic_train_batch
+
+
+@dataclass(frozen=True)
+class LengthDistribution:
+    kind: str = "uniform"     # uniform | bimodal | fixed
+    lo: int = 5
+    hi: int = 500
+
+    def sample(self, rng: random.Random) -> int:
+        if self.kind == "fixed":
+            return self.hi
+        if self.kind == "bimodal":
+            return rng.randint(self.lo, self.lo + 10) if rng.random() < 0.5 \
+                else rng.randint(max(self.hi - 10, self.lo), self.hi)
+        return rng.randint(self.lo, self.hi)
+
+
+@dataclass
+class RequestGenerator:
+    """Poisson arrivals with random lengths and random token payloads."""
+    rate: float
+    lengths: LengthDistribution = LengthDistribution()
+    vocab_size: int = 1000
+    seed: int = 0
+
+    def generate(self, duration: float, with_payload: bool = True
+                 ) -> List[Request]:
+        rng = random.Random(self.seed)
+        t, i, out = 0.0, 0, []
+        while True:
+            t += rng.expovariate(self.rate)
+            if t > duration:
+                return out
+            n = self.lengths.sample(rng)
+            payload = [rng.randrange(self.vocab_size) for _ in range(n)] \
+                if with_payload else None
+            out.append(Request(i, n, t, payload))
+            i += 1
+
+
+@dataclass
+class TokenStream:
+    """Deterministic per-step training batches (restart-reproducible)."""
+    cfg: ModelConfig
+    batch_size: int
+    seq_len: int
+    seed: int = 0
+
+    def batch(self, step: int):
+        key = jax.random.fold_in(jax.random.key(self.seed), step)
+        return synthetic_train_batch(self.cfg, key, self.batch_size,
+                                     self.seq_len)
+
+    def __iter__(self) -> Iterator:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1

@@ -1,0 +1,5 @@
+from repro.distributed.sharding import (axis_size, constrain, current_rules,
+                                        sharding_rules, ShardingRules)
+
+__all__ = ["constrain", "sharding_rules", "current_rules", "axis_size",
+           "ShardingRules"]

@@ -1,0 +1,256 @@
+"""Concrete sharding plans per (arch x input-shape x mesh) cell.
+
+Maps every parameter / optimizer-state / input / cache leaf to a
+PartitionSpec under the logical rules in `sharding.py`:
+
+ - TP over 'model': attention heads, FFN hidden, vocab, experts (EP),
+   mamba d_inner;
+ - FSDP over 'data': the d_model dim of every weight matrix (ZeRO-3-style
+   parameter + optimizer-state sharding — what makes llama3-405b fit);
+ - DP over ('pod','data') for batch dims;
+ - decode caches: batch over 'data' when divisible, kv-heads over 'model'
+   when divisible, otherwise *sequence* over the remaining axes (context
+   parallelism — the long_500k, batch=1 case).
+
+Every spec passes through `_fit` which drops axes that do not divide the
+dimension (e.g. 28 heads on model=16 -> replicated heads), so a single
+rule table covers all ten architectures.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import ShardingRules
+
+Axis = Any
+
+
+def _axes_size(mesh: Mesh, part) -> int:
+    if part is None:
+        return 1
+    if isinstance(part, (tuple, list)):
+        n = 1
+        for a in part:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[part]
+
+
+def _fit(rules: ShardingRules, shape: Tuple[int, ...], *logical: Axis) -> P:
+    """Logical axes -> PartitionSpec, dropping non-dividing axes (unless
+    rules.uneven requests GSPMD-padded sharding)."""
+    # NOTE: strict divisibility here — these specs are used for pjit
+    # *arguments*, which XLA requires to divide exactly. `rules.uneven`
+    # only affects activation constraints (sharding.constrain).
+    spec = rules.spec(*logical)
+    fixed = []
+    used = set()
+    for dim, part in zip(shape, spec):
+        size = _axes_size(rules.mesh, part)
+        keep = (part is not None and size > 1 and dim % size == 0 and
+                not (isinstance(part, str) and part in used) and
+                not (isinstance(part, tuple) and
+                     any(a in used for a in part)))
+        if keep:
+            fixed.append(part)
+            used.update(part if isinstance(part, tuple) else (part,))
+        else:
+            fixed.append(None)
+    return P(*fixed)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs (path-pattern -> logical axes)
+# ---------------------------------------------------------------------------
+
+# leaf name -> logical axes for its *unstacked* rank
+_PARAM_AXES = {
+    "tok": (None, "vocab", "fsdp"),            # (K, V, d)
+    "head": (None, "fsdp", "vocab"),           # (K, d, V)
+    "wq": ("fsdp", "heads", None),             # (d, H, dh)
+    "wk": ("fsdp", "kv_heads", None),
+    "wv": ("fsdp", "kv_heads", None),
+    "wo": ("heads", None, "fsdp"),             # (H, dh, d)
+    "q_norm": (None,),
+    "k_norm": (None,),
+    "w_gate": ("fsdp", "mlp"),                 # (d, f)
+    "w_up": ("fsdp", "mlp"),
+    "w_down": ("mlp", "fsdp"),                 # (f, d)
+    "b_up": ("mlp",),
+    "b_down": (None,),
+    "router": ("fsdp", "expert"),              # (d, E)
+    "scale": (None,),
+    "bias": (None,),
+    "in_proj": ("fsdp", "ssm_inner"),          # (d, 2di)
+    "conv_w": (None, "ssm_inner"),             # (k, di)
+    "conv_b": ("ssm_inner",),
+    "out_proj": ("ssm_inner", "fsdp"),         # (di, d)
+    "x_proj": ("ssm_inner", None),             # (di, r+2n)
+    "dt_proj": (None, "ssm_inner"),            # (r, di)
+    "dt_w": ("ssm_inner", None),               # (di, H)
+    "dt_bias": (None,),
+    "A_log": (None, None),                     # (di, n) replicated (small)
+    "D": (None,),
+}
+
+# MoE expert tensors carry a leading E dim (EP) instead of TP on f.
+_MOE_AXES = {
+    "w_gate": ("expert", "fsdp", None),        # (E, d, f)
+    "w_up": ("expert", "fsdp", None),
+    "w_down": ("expert", None, "fsdp"),        # (E, f, d)
+}
+
+
+def _param_logical(path: Tuple[str, ...], ndim: int) -> Tuple[Axis, ...]:
+    name = path[-1]
+    in_moe = "moe" in path
+    stacked = "layers" in path
+    if in_moe and name in _MOE_AXES:
+        axes = _MOE_AXES[name]
+    elif name in _PARAM_AXES:
+        axes = _PARAM_AXES[name]
+    else:
+        axes = (None,) * ndim
+    if stacked:
+        axes = (None,) + tuple(axes)
+    # pad/trim to rank (e.g. mamba A_log (di,n) vs mamba2 A_log (H,))
+    if len(axes) < ndim:
+        axes = tuple(axes) + (None,) * (ndim - len(axes))
+    return tuple(axes[:ndim])
+
+
+def _path_strs(keypath) -> Tuple[str, ...]:
+    out = []
+    for k in keypath:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def param_specs(rules: ShardingRules, abstract_params: Any) -> Any:
+    def spec(keypath, leaf):
+        path = _path_strs(keypath)
+        axes = _param_logical(path, len(leaf.shape))
+        return _fit(rules, leaf.shape, *axes)
+    return jax.tree_util.tree_map_with_path(spec, abstract_params)
+
+
+def state_specs(rules: ShardingRules, abstract_state: Any) -> Any:
+    """Train-state (params + optimizer) specs. Adam moments inherit the
+    param spec; Adafactor vr/vc drop the last / second-to-last dim."""
+    param_tree = param_specs(rules, abstract_state["params"])
+    flat_param = {
+        "/".join(_path_strs(kp)): s for kp, s in
+        jax.tree_util.tree_flatten_with_path(param_tree)[0]}
+
+    def spec(keypath, leaf):
+        path = _path_strs(keypath)
+        if path[0] == "params":
+            return flat_param["/".join(path[1:])]
+        if path[0] == "opt":
+            if path[1] in ("m", "v"):
+                return flat_param["/".join(path[2:])]
+            if path[1] == "factored":
+                kind = path[-1]            # vr | vc | v
+                ppath = "/".join(path[2:-1])
+                pspec = flat_param.get(ppath)
+                if pspec is None:
+                    return P()
+                parts = list(pspec)
+                if kind == "vr":
+                    parts = parts[:-1]
+                elif kind == "vc":
+                    parts = parts[:-2] + parts[-1:]
+                # revalidate divisibility for the reduced shape
+                fixed = [p if (p is not None and dim %
+                               _axes_size(rules.mesh, p) == 0) else None
+                         for dim, p in zip(leaf.shape, parts)]
+                return P(*fixed)
+        return P()
+    return jax.tree_util.tree_map_with_path(spec, abstract_state)
+
+
+# ---------------------------------------------------------------------------
+# Input / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(rules: ShardingRules, specs_tree: Any) -> Any:
+    """Train/prefill batch inputs: shard dim 0 (global batch) over DP."""
+    def spec(leaf):
+        return _fit(rules, leaf.shape,
+                    "batch", *([None] * (len(leaf.shape) - 1)))
+    return jax.tree.map(spec, specs_tree)
+
+
+def decode_specs(rules: ShardingRules, cfg: ModelConfig,
+                 cache_tree: Any, tok_spec: Any) -> Tuple[Any, Any]:
+    """Cache + token specs for serve_step. Context parallelism: if neither
+    batch(data) nor kv-head(model) sharding covers an axis, the cache
+    *sequence* dim is sharded instead."""
+    mesh = rules.mesh
+    data = _axes_size(mesh, rules.physical("batch"))
+    model = _axes_size(mesh, rules.physical("heads"))
+
+    def spec(keypath, leaf):
+        name = _path_strs(keypath)[-1]
+        shape = leaf.shape
+        if name in ("len", "pos_offset"):
+            return _fit(rules, shape, "batch")
+        if name in ("k", "v", "shared_k", "shared_v"):
+            # (L, B, S, KV, dh)
+            b, s, kv = shape[1], shape[2], shape[3]
+            dh = shape[4]
+            batch_ok = b % max(data, 1) == 0 and data > 1
+            heads_ok = model > 1 and kv % max(model, 1) == 0
+            if batch_ok and heads_ok:
+                return _fit(rules, shape, None, "batch", None, "kv_heads",
+                            None)
+            if batch_ok and model > 1 and dh % model == 0 and \
+                    rules.rules.get("kv_dh_shard"):
+                # head-dim sharding: decode writes stay shard-local (the
+                # dynamic position indexes the *unsharded* sequence dim)
+                # and the q.k contraction psums small (B,H,S) partials —
+                # unlike sequence sharding, which forces a full cache
+                # re-gather on every token write.
+                mesh_model = rules.physical("heads")
+                return P(None, rules.spec("batch")[0], None, None,
+                         mesh_model)
+            if batch_ok:
+                return _fit(rules, shape, None, "batch", "kv_seq", None,
+                            None)
+            # context parallelism over every available axis
+            seq_axes = tuple(a for a in mesh.axis_names)
+            fixed = _fit(rules, shape, None, None, None, None, None)
+            total = int(np.prod([mesh.shape[a] for a in seq_axes]))
+            if s % total == 0:
+                return P(None, None, seq_axes, None, None)
+            return fixed
+        if name == "conv":
+            return _fit(rules, shape, None, "batch", None, "ssm_inner")
+        if name == "state":
+            if cfg.ssm and cfg.ssm.variant == "mamba1":
+                return _fit(rules, shape, None, "batch", "ssm_inner", None)
+            return _fit(rules, shape, None, "batch", "heads", None, None)
+        return _fit(rules, shape, *([None] * len(shape)))
+
+    cache_specs_tree = jax.tree_util.tree_map_with_path(spec, cache_tree)
+    tspec = jax.tree.map(
+        lambda leaf: _fit(rules, leaf.shape, "batch",
+                          *([None] * (len(leaf.shape) - 1))), tok_spec)
+    return cache_specs_tree, tspec
+
+
+def to_shardings(rules: ShardingRules, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (C1) + flash attn.
+
+<name>.py hold pl.pallas_call kernels with explicit BlockSpec VMEM tiling;
+ops.py exposes jit'd wrappers; ref.py holds the pure-jnp oracles.
+"""
+from repro.kernels.ops import (flash_attention, flash_decode,
+                               fused_layernorm, fused_rmsnorm,
+                               fused_softmax)
+
+__all__ = ["flash_attention", "flash_decode", "fused_layernorm",
+           "fused_rmsnorm", "fused_softmax"]

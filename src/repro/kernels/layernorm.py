@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: fused AddBias+Residual+{Layer,RMS}Norm (paper C1).
+
+Implements the paper's Eq. 1 trick directly: Var(x) = E(x^2) - E(x)^2, so a
+single pass over the VMEM tile produces BOTH moments (the GPU version
+reduced x and x^2 simultaneously with ``warpAllReduceSum_2Elem``; on TPU
+the two reductions share one tile visit and fuse into the same VREG chain).
+The bias-add and residual-add ride along in the same pass, and the updated
+residual stream can be emitted without a second kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.softmax import default_block_rows
+
+
+def _norm_kernel(*refs, cols: int, eps: float, rms: bool, has_bias: bool,
+                 has_residual: bool, return_residual: bool):
+    idx = 0
+    x_ref = refs[idx]; idx += 1
+    gamma_ref = refs[idx]; idx += 1
+    beta_ref = None
+    if not rms:
+        beta_ref = refs[idx]; idx += 1
+    bias_ref = None
+    if has_bias:
+        bias_ref = refs[idx]; idx += 1
+    res_ref = None
+    if has_residual:
+        res_ref = refs[idx]; idx += 1
+    o_ref = refs[idx]; idx += 1
+    s_ref = refs[idx] if return_residual else None
+
+    s = x_ref[...].astype(jnp.float32)                   # (br, Cp)
+    if bias_ref is not None:
+        s = s + bias_ref[...].astype(jnp.float32)
+    if res_ref is not None:
+        s = s + res_ref[...].astype(jnp.float32)
+    col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = col < cols
+    s = jnp.where(valid, s, 0.0)
+    inv_n = 1.0 / cols
+    if rms:
+        mean_sq = jnp.sum(s * s, axis=-1, keepdims=True) * inv_n
+        y = s * jax.lax.rsqrt(mean_sq + eps)
+        y = y * gamma_ref[...].astype(jnp.float32)
+    else:
+        # Eq. 1: one pass yields E(x) and E(x^2) together.
+        mean = jnp.sum(s, axis=-1, keepdims=True) * inv_n
+        mean_sq = jnp.sum(s * s, axis=-1, keepdims=True) * inv_n
+        var = jnp.maximum(mean_sq - mean * mean, 0.0)
+        y = (s - mean) * jax.lax.rsqrt(var + eps)
+        y = y * gamma_ref[...].astype(jnp.float32) + \
+            beta_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+    if s_ref is not None:
+        s_ref[...] = s.astype(s_ref.dtype)
+
+
+def norm_pallas(x: jax.Array, gamma: jax.Array, beta=None, bias=None,
+                residual=None, *, rms: bool = False, eps: float = 1e-6,
+                return_residual: bool = False, block_rows: int = 0,
+                interpret: bool = False):
+    """x: (R, C); gamma/beta/bias: (C,); residual: (R, C)."""
+    r, c = x.shape
+    br = block_rows or default_block_rows(c)
+    grid = (pl.cdiv(r, br),)
+    row_spec = pl.BlockSpec((br, c), lambda i: (i, 0))
+    vec_spec = pl.BlockSpec((1, c), lambda i: (0, 0))
+
+    operands = [x, gamma.reshape(1, c)]
+    in_specs = [row_spec, vec_spec]
+    if not rms:
+        assert beta is not None
+        operands.append(beta.reshape(1, c))
+        in_specs.append(vec_spec)
+    if bias is not None:
+        operands.append(bias.reshape(1, c))
+        in_specs.append(vec_spec)
+    if residual is not None:
+        operands.append(residual)
+        in_specs.append(row_spec)
+
+    out_shape = [jax.ShapeDtypeStruct((r, c), x.dtype)]
+    out_specs = [row_spec]
+    if return_residual:
+        out_shape.append(jax.ShapeDtypeStruct((r, c), x.dtype))
+        out_specs.append(row_spec)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _norm_kernel, cols=c, eps=eps, rms=rms,
+            has_bias=bias is not None, has_residual=residual is not None,
+            return_residual=return_residual),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+        name="turbo_fused_norm",
+    )(*operands)
+    if return_residual:
+        return out[0], out[1]
+    return out[0]

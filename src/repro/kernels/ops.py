@@ -1,0 +1,94 @@
+"""jit'd dispatch wrappers around the Pallas kernels.
+
+``impl`` selects the execution path:
+  "xla"       pure-jnp reference (ref.py) — default on CPU
+  "pallas"    compiled Pallas TPU kernel — default on TPU
+  "interpret" Pallas kernel body executed by the interpreter (CPU
+              validation path; bit-accurate kernel semantics)
+  "auto"      pallas on TPU, xla elsewhere
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.layernorm import norm_pallas
+from repro.kernels.softmax import softmax_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    return impl
+
+
+def fused_softmax(x: jax.Array, lengths: Optional[jax.Array] = None, *,
+                  scale: float = 1.0, impl: str = "auto",
+                  block_rows: int = 0) -> jax.Array:
+    """Masked scaled softmax over the last dim of a 2-D array."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.softmax_ref(x, lengths, scale)
+    return softmax_pallas(x, lengths, scale=scale, block_rows=block_rows,
+                          interpret=(impl == "interpret"))
+
+
+def fused_layernorm(x, gamma, beta, bias=None, residual=None, *,
+                    eps: float = 1e-6, return_residual: bool = False,
+                    impl: str = "auto", block_rows: int = 0):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.layernorm_ref(x, gamma, beta, bias, residual, eps,
+                                 return_residual)
+    return norm_pallas(x, gamma, beta, bias, residual, rms=False, eps=eps,
+                       return_residual=return_residual,
+                       block_rows=block_rows,
+                       interpret=(impl == "interpret"))
+
+
+def fused_rmsnorm(x, gamma, bias=None, residual=None, *, eps: float = 1e-6,
+                  return_residual: bool = False, impl: str = "auto",
+                  block_rows: int = 0):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.rmsnorm_ref(x, gamma, bias, residual, eps,
+                               return_residual)
+    return norm_pallas(x, gamma, None, bias, residual, rms=True, eps=eps,
+                       return_residual=return_residual,
+                       block_rows=block_rows,
+                       interpret=(impl == "interpret"))
+
+
+def flash_attention(q, k, v, lengths=None, *, causal: bool = True,
+                    scale=None, impl: str = "auto", block_q: int = 512,
+                    block_k: int = 512) -> jax.Array:
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.flash_attention_ref(q, k, v, lengths, causal, scale)
+    return flash_attention_pallas(
+        q, k, v, lengths, causal=causal, scale=scale, block_q=block_q,
+        block_k=block_k, interpret=(impl == "interpret"))
+
+
+def flash_decode(q, k, v, lengths=None, *, scale=None,
+                 num_splits: int = 4, block_k: int = 512,
+                 impl: str = "auto") -> jax.Array:
+    """Split-K decode attention. q: (B,H,dh); k,v: (B,KV,S,dh)."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        out = ref.flash_attention_ref(q[:, :, None, :], k, v, lengths,
+                                      causal=False, scale=scale)
+        return out[:, :, 0]
+    return flash_decode_pallas(q, k, v, lengths, scale=scale,
+                               num_splits=num_splits, block_k=block_k,
+                               interpret=(impl == "interpret"))

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: masked scaled softmax as a *batch reduction* (paper C1).
+
+TPU adaptation of TurboTransformers §4.1.2: instead of batching X 1-D
+reductions per GPU warp, we pack ``block_rows`` rows into one VMEM tile and
+reduce along the 128-lane dimension. One HBM->VMEM read, the full
+max/exp/sum/divide chain fused in-register, one write back — the same
+"do many reductions per synchronization-free pass" structure as the paper's
+``warpAllReduceSum_XElem``.
+
+Variable-length aware: an optional per-row valid length masks the tail,
+which is exactly the serving-time ApplyMaskAndSoftmax fusion.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _softmax_kernel(x_ref, len_ref, o_ref, *, cols: int, scale: float):
+    x = x_ref[...].astype(jnp.float32) * scale          # (br, Cp)
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    valid = col < jnp.minimum(len_ref[...], cols)       # (br,1) broadcast
+    x = jnp.where(valid, x, -jnp.inf)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(x - m)
+    e = jnp.where(valid, e, 0.0)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = (e / jnp.maximum(s, 1e-30)).astype(o_ref.dtype)
+
+
+def default_block_rows(cols: int, vmem_budget: int = 1 << 21) -> int:
+    """Rows per VMEM tile: keep x + out under ~2MB of f32."""
+    per_row = max(cols, 128) * 4 * 2
+    rows = max(vmem_budget // per_row, 8)
+    return int(min(256, pl.next_power_of_2(rows)))
+
+
+def softmax_pallas(x: jax.Array, lengths=None, *, scale: float = 1.0,
+                   block_rows: int = 0, interpret: bool = False
+                   ) -> jax.Array:
+    """x: (R, C); lengths: optional (R,) int32 valid lengths."""
+    r, c = x.shape
+    br = block_rows or default_block_rows(c)
+    br = min(br, max(8, pl.next_power_of_2(r) // 1 if r >= 8 else 8))
+    if lengths is None:
+        lengths = jnp.full((r,), c, jnp.int32)
+    len2d = lengths.astype(jnp.int32).reshape(r, 1)
+    grid = (pl.cdiv(r, br),)
+    return pl.pallas_call(
+        functools.partial(_softmax_kernel, cols=c, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), x.dtype),
+        interpret=interpret,
+        name="turbo_softmax",
+    )(x, len2d)

@@ -1,0 +1,469 @@
+"""Loop-aware analysis of post-SPMD optimized HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each while-loop body
+ONCE — useless for scan-over-layers programs (a 126-layer model reports
+1-layer flops). This module parses the printed HLO and evaluates
+
+  flops       dot/convolution flops, nested computations multiplied by
+              their while-loop trip counts (parsed from the loop condition)
+  hbm_bytes   operand+result bytes of every top-level op per computation
+              (fusions count as single ops -> internalized traffic is not
+              double-counted), x trip counts
+  collectives operand bytes per collective type, x trip counts
+
+It is deliberately a *static, structural* profile — the exact quantity a
+roofline needs — and is validated against hand-computed 6ND model flops in
+tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(\(?[^=]*?)\s([\w\-]+)\(")
+COMP_HDR_RE = re.compile(
+    r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*\(.*->.*\{")
+TRIP_RE = re.compile(r"constant\((\d+)\)")
+CALL_ATTR_RE = re.compile(
+    r"(?:body|to_apply|calls|condition)=(%?[\w.\-]+)")
+GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in SHAPE_RE.findall(type_str):
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    total = 0
+    for dt, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_shapes: list
+    operands: List[str]
+    line: str
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    symbols: Dict[str, list] = field(default_factory=dict)
+
+
+@dataclass
+class Profile:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_type: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Profile", scale: float = 1.0) -> None:
+        self.flops += other.flops * scale
+        self.hbm_bytes += other.hbm_bytes * scale
+        self.collective_bytes += other.collective_bytes * scale
+        for k, v in other.collective_by_type.items():
+            self.collective_by_type[k] = \
+                self.collective_by_type.get(k, 0.0) + v * scale
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = \
+                self.collective_counts.get(k, 0.0) + v * scale
+
+
+def parse_module(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_marker = None
+    for line in hlo_text.splitlines():
+        if line.startswith("HloModule"):
+            continue
+        if "/*" in line:
+            # tuple-index comments (/*index=5*/) contain '=' and break
+            # instruction matching — strip them
+            line = re.sub(r"/\*.*?\*/", "", line)
+        if cur is None:
+            m = COMP_HDR_RE.match(line)
+            if m:
+                cur = Computation(m.group(1).lstrip("%"))
+                if line.startswith("ENTRY"):
+                    entry_marker = cur.name
+                continue
+        else:
+            if line.startswith("}") or line.strip() == "}":
+                comps[cur.name] = cur
+                cur = None
+                continue
+            m = INSTR_RE.match(line)
+            if not m:
+                continue
+            name = m.group(1).lstrip("%")
+            shapes = _parse_shapes(m.group(2))
+            opcode = m.group(3)
+            # operand refs: inside the first paren group only
+            start = m.end()
+            depth = 1
+            i = start
+            while i < len(line) and depth:
+                if line[i] == "(":
+                    depth += 1
+                elif line[i] == ")":
+                    depth -= 1
+                i += 1
+            operands = re.findall(r"%([\w.\-]+)", line[start:i])
+            instr = Instr(name, opcode, shapes, operands, line,
+                          is_root=line.lstrip().startswith("ROOT"))
+            cur.instrs.append(instr)
+            cur.symbols[name] = shapes
+    if entry_marker:
+        comps["__entry__"] = comps[entry_marker]
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """lax.scan/fori conditions compare the induction var to a constant."""
+    best = 1
+    for ins in cond.instrs:
+        for m in TRIP_RE.finditer(ins.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    if ins.opcode not in ("dot", "convolution"):
+        return 0.0
+    result_elems = 0
+    for dt, shape in ins.result_shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        result_elems += n
+    if ins.opcode == "convolution":
+        # approximate: 2 * result * (kernel spatial * in_channels)
+        return 2.0 * result_elems  # convs are negligible in this codebase
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    contract = 1
+    if m and ins.operands:
+        lhs = comp.symbols.get(ins.operands[0])
+        if lhs:
+            _, lhs_shape = lhs[0]
+            for d in m.group(1).split(","):
+                if d and int(d) < len(lhs_shape):
+                    contract *= lhs_shape[int(d)]
+    return 2.0 * result_elems * contract
+
+
+def _group_size(line: str) -> int:
+    g = GROUPS_RE.search(line)
+    if g:
+        return int(g.group(2))
+    g2 = GROUPS_BRACE_RE.search(line)
+    if g2:
+        return len([x for x in g2.group(1).split(",") if x.strip()])
+    return 1
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> int:
+    total = 0
+    for op in ins.operands:
+        shapes = comp.symbols.get(op)
+        if shapes:
+            total += _nbytes(shapes)
+    return total
+
+
+# Ops that touch only a slice of their (possibly huge) first operand: HBM
+# traffic is the slice, not the array. Without this, a scan that
+# dynamic-slices per-layer weights out of the stacked (L, ...) parameter
+# would be charged L x the whole stack.
+_SLICING_OPS = ("dynamic-slice", "gather", "slice")
+_INPLACE_UPDATE_OPS = ("dynamic-update-slice", "scatter")
+
+
+def _instr_hbm_bytes(ins: Instr, comp: Computation) -> int:
+    result = _nbytes(ins.result_shapes)
+    if ins.opcode == "convert":
+        return 0        # CPU bf16<->f32 round-trip; free on TPU (see above)
+    if ins.opcode in _SLICING_OPS:
+        # read the slice (~= result) + tiny indices; not the full operand
+        return 2 * result
+    if ins.opcode in _INPLACE_UPDATE_OPS:
+        # read + write the updated region (~= update operand), in place
+        upd = 0
+        if len(ins.operands) >= 2:
+            shapes = comp.symbols.get(ins.operands[1])
+            if shapes:
+                upd = _nbytes(shapes)
+        return 2 * max(upd, 1) if upd else 2 * result
+    return result + _operand_bytes(ins, comp)
+
+
+_TRANSPARENT = ("convert", "bitcast", "copy", "reshape")
+
+
+def _effective_consumers(comp: Computation, name: str, depth: int = 0
+                         ) -> List[Instr]:
+    """Users of ``name``, looking through convert/bitcast/copy chains (the
+    CPU backend wraps in-place updates in whole-buffer convert round-trips
+    that a TPU lowering would not emit)."""
+    out: List[Instr] = []
+    for u in comp.instrs:
+        if name not in u.operands:
+            continue
+        if u.opcode in _TRANSPARENT and depth < 4:
+            out.extend(_effective_consumers(comp, u.name, depth + 1))
+        else:
+            out.append(u)
+    return out
+
+
+def _effective_root(comp: Computation) -> Optional[Instr]:
+    root = next((i for i in comp.instrs if i.is_root), None)
+    hops = 0
+    while root is not None and root.opcode in _TRANSPARENT and \
+            root.operands and hops < 4:
+        nxt = next((i for i in comp.instrs
+                    if i.name == root.operands[0]), None)
+        if nxt is None:
+            break
+        root = nxt
+        hops += 1
+    return root
+
+
+def _update_bytes(c: Instr, fused: Computation) -> int:
+    """Update-region size of a (fused) dynamic-update-slice / scatter."""
+    if len(c.operands) >= 2:
+        shapes = fused.symbols.get(c.operands[1])
+        if shapes:
+            return _nbytes(shapes)
+    return _nbytes(c.result_shapes)
+
+
+def _fusion_hbm_bytes(ins: Instr, comp: Computation,
+                      comps: Dict[str, "Computation"]) -> int:
+    """Fusion boundary traffic with slice/in-place awareness:
+
+    - result charged at update-region size when the fusion ROOT is a
+      dynamic-update-slice/scatter (in-place aliasing);
+    - an operand consumed only by slicing ops inside the fusion is charged
+      at the slice size; consumed only by in-place updates -> the update
+      region; otherwise full size."""
+    fused = None
+    m = re.search(r"calls=(%?[\w.\-]+)", ins.line)
+    if m:
+        fused = comps.get(m.group(1).lstrip("%"))
+    if fused is None:
+        return _nbytes(ins.result_shapes) + _operand_bytes(ins, comp)
+    # pure-cast fusions (convert/bitcast/copy chains with no arithmetic)
+    # are CPU-backend artifacts: the CPU has no native bf16 GEMM and
+    # round-trips operands through f32. TPU MXUs read bf16 directly, so
+    # these fusions carry no HBM traffic in the v5e roofline model.
+    if all(fi.opcode in _TRANSPARENT + ("parameter", "constant",
+                                        "dynamic-slice")
+           for fi in fused.instrs):
+        return 0
+    root = _effective_root(fused)
+    if root is not None and root.opcode in _INPLACE_UPDATE_OPS:
+        total = _update_bytes(root, fused)
+    else:
+        total = _nbytes(ins.result_shapes)
+    param_names = {}
+    for fin in fused.instrs:
+        if fin.opcode == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", fin.line)
+            if pm:
+                param_names[int(pm.group(1))] = fin.name
+    for idx, op in enumerate(ins.operands):
+        shapes = comp.symbols.get(op)
+        if not shapes:
+            continue
+        full = _nbytes(shapes)
+        pname = param_names.get(idx)
+        if pname is None:
+            total += full
+            continue
+        consumers = _effective_consumers(fused, pname)
+        if consumers and all(c.opcode in _SLICING_OPS
+                             for c in consumers):
+            sliced = sum(_nbytes(c.result_shapes) for c in consumers)
+            total += min(full, max(sliced, 1))
+        elif consumers and all(c.opcode in _INPLACE_UPDATE_OPS
+                               for c in consumers):
+            total += min(full, sum(_update_bytes(c, fused)
+                                   for c in consumers))
+        else:
+            total += full
+    return total
+
+
+def analyze(hlo_text: str) -> Profile:
+    comps = parse_module(hlo_text)
+    memo: Dict[str, Profile] = {}
+
+    def called_comps(ins: Instr):
+        for m in CALL_ATTR_RE.finditer(ins.line):
+            yield m.group(1).lstrip("%")
+
+    def eval_comp(name: str, in_fusion: bool = False) -> Profile:
+        key = name + ("#f" if in_fusion else "")
+        if key in memo:
+            return memo[key]
+        memo[key] = Profile()       # cycle guard
+        comp = comps.get(name)
+        if comp is None:
+            return memo[key]
+        prof = Profile()
+        for ins in comp.instrs:
+            prof.flops += _dot_flops(ins, comp)
+            if ins.opcode == "while":
+                body = cond = None
+                mb = re.search(r"body=(%?[\w.\-]+)", ins.line)
+                mc = re.search(r"condition=(%?[\w.\-]+)", ins.line)
+                if mb:
+                    body = mb.group(1).lstrip("%")
+                if mc:
+                    cond = mc.group(1).lstrip("%")
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                if body:
+                    prof.add(eval_comp(body), trips)
+                continue
+            if ins.opcode == "fusion":
+                # fused computation: flops recurse, bytes = op boundary
+                for cname in called_comps(ins):
+                    sub = eval_comp(cname, in_fusion=True)
+                    prof.flops += sub.flops
+                    prof.collective_bytes += sub.collective_bytes
+                if not in_fusion:
+                    prof.hbm_bytes += _fusion_hbm_bytes(ins, comp, comps)
+                continue
+            if ins.opcode in ("call", "custom-call", "conditional",
+                              "async-start"):
+                for cname in called_comps(ins):
+                    prof.add(eval_comp(cname, in_fusion=in_fusion))
+                if not in_fusion:
+                    prof.hbm_bytes += _operand_bytes(ins, comp) + \
+                        _nbytes(ins.result_shapes)
+                continue
+            base = ins.opcode.replace("-start", "")
+            if base in COLLECTIVES:
+                nbytes = _operand_bytes(ins, comp)
+                if nbytes == 0:     # '-done' of async pair
+                    continue
+                prof.collective_bytes += nbytes
+                prof.collective_by_type[base] = \
+                    prof.collective_by_type.get(base, 0.0) + nbytes
+                prof.collective_counts[base] = \
+                    prof.collective_counts.get(base, 0.0) + 1
+                if not in_fusion:
+                    prof.hbm_bytes += nbytes + _nbytes(ins.result_shapes)
+                continue
+            if ins.opcode in ("parameter", "constant", "get-tuple-element",
+                              "tuple", "bitcast", "after-all"):
+                continue
+            if not in_fusion:
+                prof.hbm_bytes += _instr_hbm_bytes(ins, comp)
+        memo[key] = prof
+        return prof
+
+    return eval_comp("__entry__")
+
+
+def top_contributors(hlo_text: str, k: int = 25):
+    """Heaviest HBM-traffic instructions: (bytes*trips, where, line)."""
+    comps = parse_module(hlo_text)
+    scales: Dict[str, float] = {"__entry__": 1.0}
+    entry = comps.get("__entry__")
+    if entry is None:
+        return []
+    # propagate loop-trip scale down the call graph
+    order = [("__entry__", 1.0)]
+    seen = set()
+    rows = []
+    while order:
+        name, scale = order.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                mc = re.search(r"condition=(%?[\w.\-]+)", ins.line)
+                mb = re.search(r"body=(%?[\w.\-]+)", ins.line)
+                trips = _trip_count(
+                    comps[mc.group(1).lstrip("%")]) if mc and \
+                    mc.group(1).lstrip("%") in comps else 1
+                if mb:
+                    order.append((mb.group(1).lstrip("%"), scale * trips))
+                continue
+            if ins.opcode in ("fusion",):
+                m = re.search(r"calls=(%?[\w.\-]+)", ins.line)
+                nbytes = _fusion_hbm_bytes(ins, comp, comps) * scale
+                rows.append((nbytes, f"{name}/{ins.name}",
+                             ins.line.strip()[:140]))
+                continue
+            if ins.opcode in ("call", "conditional"):
+                for m in CALL_ATTR_RE.finditer(ins.line):
+                    order.append((m.group(1).lstrip("%"), scale))
+                continue
+            if ins.opcode in ("parameter", "constant",
+                              "get-tuple-element", "tuple", "bitcast",
+                              "after-all"):
+                continue
+            nbytes = _instr_hbm_bytes(ins, comp) * scale
+            rows.append((nbytes, f"{name}/{ins.name}",
+                         ins.line.strip()[:140]))
+    rows.sort(reverse=True)
+    return rows[:k]
+
+
+def _cli():
+    import argparse
+    import zstandard
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+    raw = open(args.path, "rb").read()
+    if args.path.endswith(".zst"):
+        raw = zstandard.ZstdDecompressor().decompress(raw)
+    txt = raw.decode()
+    prof = analyze(txt)
+    print(f"flops={prof.flops:.3e} hbm_bytes={prof.hbm_bytes:.3e} "
+          f"coll={prof.collective_bytes:.3e}")
+    for nbytes, where, line in top_contributors(txt, args.top):
+        print(f"{nbytes/1e9:10.2f}GB  {where:50s} {line}")
+
+
+if __name__ == "__main__":
+    _cli()

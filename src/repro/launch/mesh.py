@@ -1,0 +1,18 @@
+"""Production meshes. Defined as FUNCTIONS so importing this module never
+touches jax device state (the dry-run sets the fake-device count before
+any jax initialization)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for subprocess multi-device tests (8 host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

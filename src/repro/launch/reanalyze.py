@@ -1,0 +1,81 @@
+"""Offline re-analysis: recompute roofline fields of dry-run JSON records
+from their saved .hlo.zst dumps (no recompilation). Used after analyzer
+improvements and during perf iterations.
+
+  PYTHONPATH=src python -m repro.launch.reanalyze [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import zstandard
+
+from repro.launch.hlo_analysis import analyze
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def reanalyze_record(json_path: str) -> dict:
+    hlo_path = json_path.replace(".json", ".hlo.zst")
+    rec = json.load(open(json_path))
+    if not os.path.exists(hlo_path):
+        return rec
+    txt = zstandard.ZstdDecompressor().decompress(
+        open(hlo_path, "rb").read()).decode()
+    prof = analyze(txt)
+    chips = rec["chips"]
+    flops_dev = float(prof.flops)
+    bytes_dev = float(prof.hbm_bytes)
+    coll_dev = float(prof.collective_bytes)
+    model_flops = rec["roofline"]["model_flops"]
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    bound = max(t_comp, t_mem, t_coll)
+    rec["cost"]["flops_per_device"] = flops_dev
+    rec["cost"]["bytes_per_device"] = bytes_dev
+    rec["collectives"] = {
+        "bytes_by_type": prof.collective_by_type,
+        "counts": prof.collective_counts,
+        "total_bytes": coll_dev,
+    }
+    rec["roofline"].update({
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": max((t_comp, "compute"), (t_mem, "memory"),
+                        (t_coll, "collective"))[1],
+        "hlo_flops_global": flops_dev * chips,
+        "useful_flops_ratio": (model_flops / (flops_dev * chips)
+                               if flops_dev else 0.0),
+        "step_time_bound_s": bound,
+        "roofline_fraction": (
+            min(1.0, (model_flops / chips / PEAK_FLOPS) / bound)
+            if bound > 0 else 0.0),
+    })
+    json.dump(rec, open(json_path, "w"), indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        rec = reanalyze_record(path)
+        r = rec["roofline"]
+        print(f"{rec['arch']:22s} {rec['shape']:12s} {rec['mesh']:22s} "
+              f"comp={r['t_compute_s']*1e3:8.2f}ms "
+              f"mem={r['t_memory_s']*1e3:8.2f}ms "
+              f"coll={r['t_collective_s']*1e3:8.2f}ms "
+              f"dom={r['dominant']:10s} "
+              f"useful={r['useful_flops_ratio']:6.2f} "
+              f"frac={r['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Stub modality frontends (per assignment: frontends are STUBS that supply
+precomputed frame/patch embeddings; the transformer backbone is the system
+under test).
+
+- vision (Qwen2-VL): `vision_patch_embeds` fabricates patch embeddings for a
+  square grid; at dry-run time `input_specs` passes ShapeDtypeStructs.
+- audio (MusicGen): EnCodec token streams with the MusicGen *delay pattern*
+  applied across codebooks.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def num_vision_patches(seq_len: int) -> int:
+    """Stub policy: image prefix occupies ~1/8 of the sequence, grid-aligned."""
+    n = max(seq_len // 8, 4)
+    g = int(n ** 0.5)
+    return max(g * g, 4)
+
+
+def vision_patch_embeds(cfg: ModelConfig, key, batch: int, seq_len: int
+                        ) -> jax.Array:
+    """Precomputed ViT patch embeddings (stub): (B, N_img, d_model)."""
+    n = num_vision_patches(seq_len)
+    return jax.random.normal(key, (batch, n, cfg.d_model),
+                             jnp.dtype(cfg.dtype)) * 0.02
+
+
+def apply_delay_pattern(tokens: jax.Array, pad_id: int = 0) -> jax.Array:
+    """MusicGen delay pattern: codebook k is shifted right by k frames.
+
+    tokens: (B, K, S) -> delayed (B, K, S). Positions that fall before the
+    stream start are filled with ``pad_id``.
+    """
+    b, k, s = tokens.shape
+    out = []
+    for i in range(k):
+        shifted = jnp.pad(tokens[:, i, :], ((0, 0), (i, 0)),
+                          constant_values=pad_id)[:, :s]
+        out.append(shifted)
+    return jnp.stack(out, axis=1)
+
+
+def undelay_pattern(tokens: jax.Array) -> jax.Array:
+    """Inverse of `apply_delay_pattern` (best-effort; tail truncated)."""
+    b, k, s = tokens.shape
+    out = []
+    for i in range(k):
+        shifted = jnp.pad(tokens[:, i, :], ((0, 0), (0, i)))[:, i:i + s]
+        out.append(shifted)
+    return jnp.stack(out, axis=1)
+
+
+def encodec_tokens(cfg: ModelConfig, key, batch: int, seq_len: int
+                   ) -> jax.Array:
+    """Stub EnCodec tokenizer output: (B, K, S) codebook ids, delayed."""
+    toks = jax.random.randint(key, (batch, cfg.num_codebooks, seq_len),
+                              0, cfg.vocab_size, jnp.int32)
+    return apply_delay_pattern(toks)

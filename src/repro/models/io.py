@@ -1,0 +1,94 @@
+"""Model input construction: concrete synthetic batches (tests/examples) and
+ShapeDtypeStruct stand-ins (dry-run, no allocation).
+
+``input_specs(cfg, shape)`` is the single source of truth for what each
+(arch x input-shape) cell feeds into train_step / prefill / serve_step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import frontend, transformer
+
+
+def _token_shape(cfg: ModelConfig, batch: int, seq: int) -> Tuple[int, ...]:
+    if cfg.num_codebooks:
+        return (batch, cfg.num_codebooks, seq)
+    return (batch, seq)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct(_token_shape(cfg, b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct(_token_shape(cfg, b, s), jnp.int32),
+    }
+    if cfg.frontend == "vision":
+        n = frontend.num_vision_patches(s)
+        specs["embeds_override"] = jax.ShapeDtypeStruct(
+            (b, n, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig
+                        ) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct(_token_shape(cfg, b, s), jnp.int32)}
+    if cfg.frontend == "vision":
+        n = frontend.num_vision_patches(s)
+        specs["embeds_override"] = jax.ShapeDtypeStruct(
+            (b, n, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig
+                       ) -> Dict[str, Any]:
+    """serve_step inputs: one new token + a KV/SSM cache of seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape = (b, cfg.num_codebooks) if cfg.num_codebooks else (b,)
+    cache = transformer.cache_specs(cfg, b, s)
+    return {"tokens_t": jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+            "cache": cache}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# Concrete synthetic batches (smoke tests / examples / data pipeline)
+# ---------------------------------------------------------------------------
+
+
+def synthetic_train_batch(cfg: ModelConfig, key, batch: int, seq: int
+                          ) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.num_codebooks:
+        tokens = frontend.encodec_tokens(cfg, k1, batch, seq)
+    else:
+        tokens = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size,
+                                    jnp.int32)
+    labels = jnp.roll(tokens, -1, axis=-1)
+    out = {"tokens": tokens, "labels": labels}
+    if cfg.frontend == "vision":
+        out["embeds_override"] = frontend.vision_patch_embeds(
+            cfg, k3, batch, seq)
+    return out
+
+
+def synthetic_prompts(cfg: ModelConfig, key, batch: int, seq: int
+                      ) -> Dict[str, Any]:
+    b = synthetic_train_batch(cfg, key, batch, seq)
+    out = {"tokens": b["tokens"]}
+    if "embeds_override" in b:
+        out["embeds_override"] = b["embeds_override"]
+    return out

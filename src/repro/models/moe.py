@@ -1,0 +1,144 @@
+"""Top-k MoE with capacity-bounded sort-based dispatch (EP-shardable).
+
+Dispatch avoids the O(T*E*C) one-hot einsum: assignments are ranked within
+their expert via a stable sort, tokens beyond capacity are dropped, and the
+(E, C, d) expert batch is built by scatter. Experts are sharded over the
+'expert' logical axis (mesh 'model'); GSPMD turns the gather/scatter into
+all-to-alls.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import axis_size, constrain
+from repro.models.layers import dense_init
+
+Params = Dict[str, jax.Array]
+
+
+def init_moe(cfg: ModelConfig, key, dtype) -> Params:
+    assert cfg.moe is not None
+    e, d, f = cfg.moe.num_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, e), d, jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, f), d, dtype),
+        "w_up": dense_init(ks[2], (e, d, f), d, dtype),
+        "w_down": dense_init(ks[3], (e, f, d), f, dtype),
+    }
+    return p
+
+
+def expert_capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    moe = cfg.moe
+    cap = int(num_tokens * moe.top_k / moe.num_experts * moe.capacity_factor)
+    return max(8, -(-cap // 8) * 8)   # round up to multiple of 8
+
+
+def route(cfg: ModelConfig, p: Params, x2d: jax.Array
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x2d: (T, d) -> (weights (T,k), expert_idx (T,k), aux_loss)."""
+    moe = cfg.moe
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, moe.top_k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, moe.num_experts), axis=1), axis=0)
+    aux = moe.num_experts * jnp.sum(me * ce) / moe.top_k
+    return weights, idx, aux
+
+
+def _dispatch_group(x2d, idx, weights, e, cap, dtype):
+    """One dispatch group: tokens (Tg,d) routed to an (E, cap) buffer.
+
+    Returns (xin (E,cap,d), slot (Tg*k,), flat_token, flat_weight, keep)."""
+    tg = x2d.shape[0]
+    k = idx.shape[1]
+    flat_expert = idx.reshape(tg * k)
+    flat_weight = weights.reshape(tg * k).astype(dtype)
+    flat_token = jnp.repeat(jnp.arange(tg), k)
+    # rank within expert via stable sort + cummax of run starts
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    i = jnp.arange(tg * k, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_expert[1:] != sorted_expert[:-1]])
+    run_start = jax.lax.cummax(jnp.where(is_start, i, 0))
+    rank = jnp.zeros_like(i).at[order].set(i - run_start)
+    keep = rank < cap
+    slot = jnp.where(keep, flat_expert * cap + rank, e * cap)
+    table = jnp.full((e * cap + 1,), tg * k, jnp.int32)
+    table = table.at[slot].set(jnp.arange(tg * k, dtype=jnp.int32))
+    table = table[:-1].reshape(e, cap)
+    valid = table < tg * k
+    tok_for_slot = flat_token[jnp.where(valid, table, 0)]
+    xin = x2d[tok_for_slot] * valid[..., None].astype(dtype)
+    return xin, slot, flat_token, flat_weight, keep
+
+
+def _combine_group(yflat, slot, flat_token, flat_weight, keep, tg, d,
+                   dtype):
+    contrib = yflat[slot] * flat_weight[:, None] * \
+        keep.astype(dtype)[:, None]
+    return jnp.zeros((tg, d), dtype).at[flat_token].add(contrib)
+
+
+def apply_moe(cfg: ModelConfig, p: Params, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,d) -> (out (B,S,d), aux_loss scalar).
+
+    GShard-style grouped dispatch: tokens are split into ``G`` groups (one
+    per data shard when a mesh is active) with per-group expert capacity,
+    so the token->expert movement is an all-to-all between the data and
+    expert axes instead of a full x all-gather. G=1 on a single device.
+    """
+    moe = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e = moe.num_experts
+    k = moe.top_k
+    groups = axis_size("batch")
+    if t % groups != 0:
+        groups = 1
+    tg = t // groups
+    x2d = x.reshape(t, d)
+    weights, idx, aux = route(cfg, p, x2d)
+    cap = expert_capacity(cfg, tg)
+
+    x3 = x2d.reshape(groups, tg, d)
+    idx3 = idx.reshape(groups, tg, k)
+    w3 = weights.reshape(groups, tg, k)
+    xin, slot, flat_token, flat_weight, keep = jax.vmap(
+        _dispatch_group, in_axes=(0, 0, 0, None, None, None)
+    )(x3, idx3, w3, e, cap, x.dtype)                    # xin: (G,E,cap,d)
+    xin = jnp.swapaxes(xin, 0, 1)                        # (E,G,cap,d)
+    xin = constrain(xin, "expert", "exp_cap", None, "embed")
+
+    # Expert FFN: (E,G,C,d) x (E,d,f)
+    if cfg.act == "swiglu":
+        g = jnp.einsum("egcd,edf->egcf", xin, p["w_gate"])
+        u = jnp.einsum("egcd,edf->egcf", xin, p["w_up"])
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("egcd,edf->egcf", xin, p["w_up"]))
+    h = constrain(h, "expert", "exp_cap", None, None)
+    yexp = jnp.einsum("egcf,efd->egcd", h, p["w_down"])
+    yexp = constrain(yexp, "expert", "exp_cap", None, "embed")
+    yexp = jnp.swapaxes(yexp, 0, 1)                      # (G,E,cap,d)
+    yflat = yexp.reshape(groups, e * cap, d)
+    yflat = jnp.concatenate(
+        [yflat, jnp.zeros((groups, 1, d), x.dtype)], axis=1)
+
+    out = jax.vmap(_combine_group,
+                   in_axes=(0, 0, 0, 0, 0, None, None, None))(
+        yflat, slot, flat_token, flat_weight, keep, tg, d, x.dtype)
+    out = constrain(out, "batch", None, None).reshape(b, s, d)
+    return constrain(out, "batch", None, "embed"), aux

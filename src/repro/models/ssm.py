@@ -1,0 +1,401 @@
+"""Mamba1 (selective scan) and Mamba2 (scalar-decay multihead / SSD) blocks.
+
+Prefill/training uses a *chunked* associative scan: the sequence is split
+into chunks processed by an O(log c) associative scan, with the inter-chunk
+state carried through a `lax.scan`. This bounds live memory to
+O(chunk * d_inner * N) per device and keeps HLO compact for 500k-token
+sequences. Decode is a single recurrence step carrying (conv_state,
+ssm_state).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed import constrain
+from repro.models.layers import dense_init
+
+Params = Dict[str, jax.Array]
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return -(-cfg.d_model // 16)
+
+
+def num_ssm_heads(cfg: ModelConfig) -> int:
+    return cfg.d_inner // cfg.ssm.head_dim
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(cfg: ModelConfig, key, dtype) -> Params:
+    ssm = cfg.ssm
+    d, di, n = cfg.d_model, cfg.d_inner, ssm.state_dim
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "in_proj": dense_init(ks[0], (d, 2 * di), d, dtype),
+        "conv_w": dense_init(ks[1], (ssm.conv_kernel, di), ssm.conv_kernel,
+                             dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, d), di, dtype),
+    }
+    if ssm.variant == "mamba1":
+        r = dt_rank(cfg)
+        p.update({
+            "x_proj": dense_init(ks[3], (di, r + 2 * n), di, dtype),
+            "dt_proj": dense_init(ks[4], (r, di), r, dtype),
+            "dt_bias": jnp.log(jnp.expm1(
+                jnp.clip(jnp.exp(jax.random.uniform(
+                    ks[5], (di,), jnp.float32,
+                    math.log(1e-3), math.log(1e-1))), 1e-4, None))
+            ).astype(jnp.float32),
+            "A_log": jnp.log(jnp.broadcast_to(
+                jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+            "D": jnp.ones((di,), jnp.float32),
+        })
+    else:  # mamba2
+        h = num_ssm_heads(cfg)
+        p.update({
+            "bc_proj": dense_init(ks[3], (di, 2 * n), di, dtype),
+            "dt_w": dense_init(ks[6], (di, h), di, dtype),
+            "dt_bias": jnp.zeros((h,), jnp.float32),
+            "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+            "D": jnp.ones((h,), jnp.float32),
+        })
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(p: Params, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. x: (B,S,di)."""
+    k = p["conv_w"].shape[0]
+    xpad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xpad[:, i:i + x.shape[1], :] * p["conv_w"][i]
+              for i in range(k))
+    return out + p["conv_b"]
+
+
+def _conv_step(p: Params, conv_state: jax.Array, x_t: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """conv_state: (B, k-1, di); x_t: (B, di) -> (new_state, out)."""
+    k = p["conv_w"].shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)
+    out = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+    return window[:, 1:], out
+
+
+def _chunk_scan(a: jax.Array, bx: jax.Array, h0: jax.Array,
+                log_a: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + bx_t over the chunk's time axis (axis=1).
+
+    a, bx: (B, c, ...); h0: (B, ...). Returns (h_all (B,c,...), h_last).
+    ``log_a`` = log of a (for the stable cumulative product exp(cumsum)).
+    """
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    _, h_zero = lax.associative_scan(combine, (a, bx), axis=1)
+    cum_a = jnp.exp(jnp.cumsum(log_a, axis=1))
+    h_all = h_zero + cum_a * h0[:, None]
+    return h_all, h_all[:, -1]
+
+
+def _pad_chunks(x: jax.Array, chunk: int) -> Tuple[jax.Array, int]:
+    s = x.shape[1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    return x, nc
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 selective scan
+# ---------------------------------------------------------------------------
+
+
+def _mamba1_inner(cfg: ModelConfig, p: Params, xc: jax.Array,
+                  h0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """xc: (B,S,di) post-conv post-silu; h0: (B,di,N). Chunked scan."""
+    ssm = cfg.ssm
+    n = ssm.state_dim
+    r = dt_rank(cfg)
+    proj = jnp.einsum("bsd,de->bse", xc, p["x_proj"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", proj[..., :r], p["dt_proj"])
+        .astype(jnp.float32) + p["dt_bias"])              # (B,S,di)
+    b_t = proj[..., r:r + n].astype(jnp.float32)          # (B,S,N)
+    c_t = proj[..., r + n:].astype(jnp.float32)           # (B,S,N)
+    a_mat = -jnp.exp(p["A_log"])                          # (di,N)
+
+    chunk = ssm.chunk_size
+    xcp, nc = _pad_chunks(xc, chunk)
+    dtp, _ = _pad_chunks(dt, chunk)
+    bp, _ = _pad_chunks(b_t, chunk)
+    cp, _ = _pad_chunks(c_t, chunk)
+    s_pad = nc * chunk
+    bsz = xc.shape[0]
+    di = xc.shape[2]
+
+    def chunk_step(h, args):
+        xck, dtk, bk, ck = args                           # (B,c,...)
+        log_a = dtk[..., None] * a_mat                    # (B,c,di,N)
+        da = jnp.exp(log_a)
+        dbx = (dtk * xck.astype(jnp.float32))[..., None] * bk[:, :, None, :]
+        h_all, h_last = _chunk_scan(da, dbx, h, log_a)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, ck)        # (B,c,di)
+        return h_last, y
+
+    xs = (xcp.reshape(bsz, nc, chunk, di).swapaxes(0, 1),
+          dtp.reshape(bsz, nc, chunk, di).swapaxes(0, 1),
+          bp.reshape(bsz, nc, chunk, n).swapaxes(0, 1),
+          cp.reshape(bsz, nc, chunk, n).swapaxes(0, 1))
+    h_last, ys = lax.scan(chunk_step, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(bsz, s_pad, di)[:, :xc.shape[1]]
+    y = y + xc.astype(jnp.float32) * p["D"]
+    return y, h_last
+
+
+def _mamba1_step(cfg: ModelConfig, p: Params, xc: jax.Array, h: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. xc: (B,di); h: (B,di,N)."""
+    n = cfg.ssm.state_dim
+    r = dt_rank(cfg)
+    proj = jnp.einsum("bd,de->be", xc, p["x_proj"])
+    dt = jax.nn.softplus(
+        jnp.einsum("br,rd->bd", proj[..., :r], p["dt_proj"])
+        .astype(jnp.float32) + p["dt_bias"])              # (B,di)
+    b_t = proj[..., r:r + n].astype(jnp.float32)
+    c_t = proj[..., r + n:].astype(jnp.float32)
+    a_mat = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt[..., None] * a_mat)                   # (B,di,N)
+    dbx = (dt * xc.astype(jnp.float32))[..., None] * b_t[:, None, :]
+    h_new = da * h + dbx
+    y = jnp.einsum("bdn,bn->bd", h_new, c_t)
+    y = y + xc.astype(jnp.float32) * p["D"]
+    return y, h_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (scalar decay per head)
+# ---------------------------------------------------------------------------
+
+
+def _mamba2_inner(cfg: ModelConfig, p: Params, xc: jax.Array, dt_in: jax.Array,
+                  h0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """xc: (B,S,di); dt_in: (B,S,H) pre-softplus; h0: (B,H,dh,N)."""
+    ssm = cfg.ssm
+    n = ssm.state_dim
+    nh = num_ssm_heads(cfg)
+    dh = ssm.head_dim
+    bc = jnp.einsum("bsd,de->bse", xc, p["bc_proj"]).astype(jnp.float32)
+    b_t, c_t = bc[..., :n], bc[..., n:]                   # (B,S,N)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a_h = -jnp.exp(p["A_log"])                            # (H,)
+    log_a = dt * a_h                                      # (B,S,H)
+
+    chunk = ssm.chunk_size
+    bsz, s = xc.shape[:2]
+    xh = xc.reshape(bsz, s, nh, dh).astype(jnp.float32)
+    xhp, nc = _pad_chunks(xh, chunk)
+    dtp, _ = _pad_chunks(dt, chunk)
+    lap, _ = _pad_chunks(log_a, chunk)
+    bp, _ = _pad_chunks(b_t, chunk)
+    cp, _ = _pad_chunks(c_t, chunk)
+    s_pad = nc * chunk
+
+    def chunk_step(h, args):
+        xk, dtk, lak, bk, ck = args
+        da = jnp.exp(lak)[..., None, None]                # (B,c,H,1,1)
+        dbx = (dtk[..., None] * xk)[..., None] * bk[:, :, None, None, :]
+        h_all, h_last = _chunk_scan(da, dbx, h, lak[..., None, None])
+        y = jnp.einsum("bchdn,bcn->bchd", h_all, ck)
+        return h_last, y
+
+    xs = (xhp.reshape(bsz, nc, chunk, nh, dh).swapaxes(0, 1),
+          dtp.reshape(bsz, nc, chunk, nh).swapaxes(0, 1),
+          lap.reshape(bsz, nc, chunk, nh).swapaxes(0, 1),
+          bp.reshape(bsz, nc, chunk, n).swapaxes(0, 1),
+          cp.reshape(bsz, nc, chunk, n).swapaxes(0, 1))
+    h_last, ys = lax.scan(chunk_step, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(bsz, s_pad, nh, dh)[:, :s]
+    y = y + xh * p["D"][:, None]
+    return y.reshape(bsz, s, nh * dh), h_last
+
+
+def _mamba2_inner_ssd(cfg: ModelConfig, p: Params, xc: jax.Array,
+                      dt_in: jax.Array, h0: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Mamba-2 SSD (structured state-space duality) block-matmul form.
+
+    Within a chunk the scalar-decay recurrence collapses to
+        y = (M ⊙ (C Bᵀ)) @ (dt·x) + exp(s)·(C · h0)
+        M[t,u] = exp(s_t − s_u) for u ≤ t,  s = cumsum(log a)
+    — two (c,c)x(c,dh) matmuls per head instead of an O(log c)
+    associative scan over (B,c,H,dh,N) tensors. All exponents are ≤ 0
+    (a ∈ (0,1)), so the form is numerically stable. Inter-chunk state is
+    carried exactly as in the scan path.
+    """
+    ssm = cfg.ssm
+    n = ssm.state_dim
+    nh = num_ssm_heads(cfg)
+    dh = ssm.head_dim
+    bc = jnp.einsum("bsd,de->bse", xc, p["bc_proj"]).astype(jnp.float32)
+    b_t, c_t = bc[..., :n], bc[..., n:]                  # (B,S,N)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a_h = -jnp.exp(p["A_log"])                           # (H,)
+    log_a = dt * a_h                                     # (B,S,H) <= 0
+
+    chunk = ssm.chunk_size
+    bsz, s = xc.shape[:2]
+    xh = xc.reshape(bsz, s, nh, dh).astype(jnp.float32)
+    xhp, nc = _pad_chunks(xh, chunk)
+    dtp, _ = _pad_chunks(dt, chunk)
+    lap, _ = _pad_chunks(log_a, chunk)
+    bp, _ = _pad_chunks(b_t, chunk)
+    cp, _ = _pad_chunks(c_t, chunk)
+    s_pad = nc * chunk
+
+    def chunk_step(h, args):
+        xk, dtk, lak, bk, ck = args                      # (B,c,...)
+        cum = jnp.cumsum(lak, axis=1)                    # (B,c,H) s_t
+        # decay matrix M[t,u] = exp(s_t - s_u), u <= t  (<= 1). Mask the
+        # exponent BEFORE exp: the upper triangle is positive and would
+        # overflow, poisoning the backward pass with inf*0 = NaN.
+        diff = cum[:, :, None, :] - cum[:, None, :, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        diff = jnp.where(tri[None, :, :, None], diff, -1e30)
+        m = jnp.exp(diff)                                # (B,c,c,H)
+        gb = jnp.einsum("btn,bun->btu", ck, bk)          # C B^T (B,c,c)
+        xdt = xk * dtk[..., None]                        # (B,c,H,dh)
+        y = jnp.einsum("btu,btuh,buhd->bthd",
+                       gb, m, xdt)                       # intra-chunk
+        # carry contribution: exp(s_t) * C_t . h0
+        y = y + jnp.exp(cum)[..., None] * \
+            jnp.einsum("btn,bhdn->bthd", ck, h)
+        # new state: exp(s_end) h0 + sum_u exp(s_end - s_u) xdt_u (x) B_u
+        s_end = cum[:, -1]                               # (B,H)
+        decay_u = jnp.exp(s_end[:, None] - cum)          # (B,c,H)
+        h_new = jnp.exp(s_end)[:, :, None, None] * h + \
+            jnp.einsum("buh,buhd,bun->bhdn", decay_u, xdt, bk)
+        return h_new, y
+
+    xs = (xhp.reshape(bsz, nc, chunk, nh, dh).swapaxes(0, 1),
+          dtp.reshape(bsz, nc, chunk, nh).swapaxes(0, 1),
+          lap.reshape(bsz, nc, chunk, nh).swapaxes(0, 1),
+          bp.reshape(bsz, nc, chunk, n).swapaxes(0, 1),
+          cp.reshape(bsz, nc, chunk, n).swapaxes(0, 1))
+    h_last, ys = lax.scan(chunk_step, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(bsz, s_pad, nh, dh)[:, :s]
+    y = y + xh * p["D"][:, None]
+    return y.reshape(bsz, s, nh * dh), h_last
+
+
+def _mamba2_step(cfg: ModelConfig, p: Params, xc: jax.Array, dt_in: jax.Array,
+                 h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """xc: (B,di); dt_in: (B,H); h: (B,H,dh,N)."""
+    ssm = cfg.ssm
+    n = ssm.state_dim
+    nh = num_ssm_heads(cfg)
+    dh = ssm.head_dim
+    bc = jnp.einsum("bd,de->be", xc, p["bc_proj"]).astype(jnp.float32)
+    b_t, c_t = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])
+    a_h = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a_h)[..., None, None]               # (B,H,1,1)
+    xh = xc.reshape(-1, nh, dh).astype(jnp.float32)
+    dbx = (dt[..., None] * xh)[..., None] * b_t[:, None, None, :]
+    h_new = da * h + dbx
+    y = jnp.einsum("bhdn,bn->bhd", h_new, c_t)
+    y = y + xh * p["D"][:, None]
+    return y.reshape(y.shape[0], nh * dh), h_new
+
+
+# ---------------------------------------------------------------------------
+# Full block
+# ---------------------------------------------------------------------------
+
+
+def ssm_state_shapes(cfg: ModelConfig, batch: int):
+    """Shapes of (conv_state, ssm_state) for one layer."""
+    ssm = cfg.ssm
+    di = cfg.d_inner
+    conv = (batch, ssm.conv_kernel - 1, di)
+    if ssm.variant == "mamba1":
+        state = (batch, di, ssm.state_dim)
+    else:
+        state = (batch, num_ssm_heads(cfg), ssm.head_dim, ssm.state_dim)
+    return conv, state
+
+
+def apply_mamba(cfg: ModelConfig, p: Params, x: jax.Array
+                ) -> jax.Array:
+    """Full-sequence mamba block (train/prefill, state discarded)."""
+    y, _, _ = apply_mamba_with_state(cfg, p, x, None)
+    return y
+
+
+def apply_mamba_with_state(cfg: ModelConfig, p: Params, x: jax.Array,
+                           init_state):
+    """x: (B,S,d). Returns (y (B,S,d), conv_state, ssm_state)."""
+    ssm = cfg.ssm
+    di = cfg.d_inner
+    bsz = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xs, z = xz[..., :di], xz[..., di:]
+    xs = constrain(xs, "batch", None, "ssm_inner")
+    if init_state is None:
+        conv0, state0 = ssm_state_shapes(cfg, bsz)
+        conv_state = jnp.zeros(conv0, x.dtype)
+        h0 = jnp.zeros(state0, jnp.float32)
+    else:
+        conv_state, h0 = init_state
+    # conv over [conv_state ; xs]
+    full = jnp.concatenate([conv_state.astype(xs.dtype), xs], axis=1)
+    k = ssm.conv_kernel
+    conv_out = sum(full[:, i:i + xs.shape[1], :] * p["conv_w"][i]
+                   for i in range(k)) + p["conv_b"]
+    xc = jax.nn.silu(conv_out)
+    new_conv_state = full[:, -(k - 1):, :] if k > 1 else conv_state
+    if ssm.variant == "mamba1":
+        y, h_last = _mamba1_inner(cfg, p, xc, h0)
+    else:
+        dt_in = jnp.einsum("bse,eh->bsh", xc, p["dt_w"])  # (B,S,H)
+        inner = _mamba2_inner_ssd if ssm.ssd_matmul else _mamba2_inner
+        y, h_last = inner(cfg, p, xc, dt_in, h0)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return constrain(out, "batch", None, "embed"), new_conv_state, h_last
+
+
+def apply_mamba_step(cfg: ModelConfig, p: Params, x_t: jax.Array,
+                     conv_state: jax.Array, h: jax.Array):
+    """Decode step. x_t: (B,d) -> (y (B,d), conv_state, h)."""
+    ssm = cfg.ssm
+    di = cfg.d_inner
+    xz = jnp.einsum("bd,de->be", x_t, p["in_proj"])
+    xs, z = xz[..., :di], xz[..., di:]
+    conv_state, conv_out = _conv_step(p, conv_state, xs)
+    xc = jax.nn.silu(conv_out)
+    if ssm.variant == "mamba1":
+        y, h = _mamba1_step(cfg, p, xc, h)
+    else:
+        dt_in = jnp.einsum("be,eh->bh", xc, p["dt_w"])
+        y, h = _mamba2_step(cfg, p, xc, dt_in, h)
+    y = y.astype(x_t.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])
+    return out, conv_state, h

@@ -1,0 +1,7 @@
+from repro.runtime.bucketing import BucketLadder
+from repro.runtime.engine import InferenceEngine
+from repro.runtime.kv_cache import (KVSlabManager, kv_bytes_per_token,
+                                    ssm_state_bytes)
+
+__all__ = ["BucketLadder", "InferenceEngine", "KVSlabManager",
+           "kv_bytes_per_token", "ssm_state_bytes"]

@@ -1,0 +1,50 @@
+"""Length bucketing: XLA needs static shapes, so the engine pads each batch
+up to a bucket boundary and caches one compiled executable per
+(bucket, batch) cell.
+
+This is the TPU-side answer to the paper's "no per-length preprocessing"
+requirement: the *set* of compiled shapes is small and fixed, padding waste
+is measured and handed to the cost model so the DP scheduler (C3) reasons
+about the true executed shapes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+
+DEFAULT_BUCKETS: Tuple[int, ...] = (32, 64, 128, 256, 512, 1024, 2048, 4096)
+DEFAULT_BATCH_BUCKETS: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
+
+
+@dataclass(frozen=True)
+class BucketLadder:
+    seq_buckets: Tuple[int, ...] = DEFAULT_BUCKETS
+    batch_buckets: Tuple[int, ...] = DEFAULT_BATCH_BUCKETS
+
+    def seq_bucket(self, seq_len: int) -> int:
+        for b in self.seq_buckets:
+            if seq_len <= b:
+                return b
+        raise ValueError(
+            f"seq_len {seq_len} exceeds max bucket {self.seq_buckets[-1]}")
+
+    def batch_bucket(self, batch: int) -> int:
+        for b in self.batch_buckets:
+            if batch <= b:
+                return b
+        raise ValueError(
+            f"batch {batch} exceeds max bucket {self.batch_buckets[-1]}")
+
+    def padding_waste(self, lengths: Sequence[int]) -> float:
+        """Fraction of executed tokens that are padding for this batch."""
+        if not lengths:
+            return 0.0
+        sb = self.seq_bucket(max(lengths))
+        bb = self.batch_bucket(len(lengths))
+        executed = sb * bb
+        useful = sum(lengths)
+        return 1.0 - useful / executed
+
+    def num_cells(self) -> int:
+        return len(self.seq_buckets) * len(self.batch_buckets)

@@ -1,0 +1,192 @@
+"""InferenceEngine: the computing runtime of the serving system.
+
+Responsibilities (paper §4 mapped to TPU/XLA):
+ - variable-length requests -> (seq bucket, batch bucket) cells with one
+   compiled executable per cell (compile cache, warmed up front);
+ - per-request last-token gathering so padding never contaminates results;
+ - prefill + decode generation with functional caches (donated buffers);
+ - KV slab accounting via :class:`KVSlabManager` (C2 at serving time);
+ - ``warmup()`` produces the cached_cost table the DP scheduler (C3) uses.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.cost_model import TableCostModel
+from repro.core.serving import Request
+from repro.models import (ModelRuntime, DEFAULT_RUNTIME, decode_step,
+                          forward_hidden, make_cache, prefill)
+from repro.models.layers import lm_logits
+from repro.runtime.bucketing import BucketLadder
+from repro.runtime.kv_cache import (KVSlabManager, kv_bytes_per_token,
+                                    ssm_state_bytes)
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ModelConfig, params: Any,
+                 rt: ModelRuntime = DEFAULT_RUNTIME,
+                 ladder: BucketLadder = BucketLadder(),
+                 pad_id: int = 0) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.rt = rt
+        self.ladder = ladder
+        self.pad_id = pad_id
+        self.kv_slab = KVSlabManager()
+        self._classify_cache: Dict[Tuple[int, int], Callable] = {}
+        self._prefill_cache: Dict[Tuple[int, int, int], Callable] = {}
+        self._decode_cache: Dict[Tuple[int, int], Callable] = {}
+        self.compile_count = 0
+        self._next_gen_id = 0
+
+    # ------------------------------------------------------------------
+    # Compiled-cell management
+    # ------------------------------------------------------------------
+    def _classify_fn(self, seq_b: int, batch_b: int) -> Callable:
+        key = (seq_b, batch_b)
+        if key not in self._classify_cache:
+            cfg, rt = self.cfg, self.rt
+
+            @jax.jit
+            def run(params, tokens, last_idx):
+                h, _, _ = forward_hidden(cfg, params, tokens, rt=rt)
+                hx = jnp.take_along_axis(
+                    h, last_idx[:, None, None].astype(jnp.int32), axis=1)
+                logits = lm_logits(cfg, params["embed"], hx)
+                return logits[:, 0] if not cfg.num_codebooks \
+                    else logits[:, :, 0]
+
+            self._classify_cache[key] = run
+            self.compile_count += 1
+        return self._classify_cache[key]
+
+    def _decode_fn(self) -> Callable:
+        key = (0, 0)
+        if key not in self._decode_cache:
+            cfg, rt = self.cfg, self.rt
+
+            @partial(jax.jit, donate_argnums=(1,))
+            def step(params, cache, tokens_t):
+                return decode_step(cfg, params, cache, tokens_t, rt=rt)
+
+            self._decode_cache[key] = step
+            self.compile_count += 1
+        return self._decode_cache[key]
+
+    # ------------------------------------------------------------------
+    # Batch padding
+    # ------------------------------------------------------------------
+    def _pad_batch(self, token_lists: Sequence[Sequence[int]]
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, int, int]:
+        lens = [len(t) for t in token_lists]
+        seq_b = self.ladder.seq_bucket(max(lens))
+        batch_b = self.ladder.batch_bucket(len(token_lists))
+        toks = np.full((batch_b, seq_b), self.pad_id, np.int32)
+        for i, t in enumerate(token_lists):
+            toks[i, :len(t)] = t
+        last = np.array([l - 1 for l in lens] +
+                        [0] * (batch_b - len(lens)), np.int32)
+        return jnp.asarray(toks), jnp.asarray(last), seq_b, batch_b
+
+    # ------------------------------------------------------------------
+    # Public API
+    # ------------------------------------------------------------------
+    def classify(self, token_lists: Sequence[Sequence[int]]) -> List[int]:
+        """Last-token classification over a variable-length batch (the
+        paper's BERT-based service)."""
+        toks, last, seq_b, batch_b = self._pad_batch(token_lists)
+        fn = self._classify_fn(seq_b, batch_b)
+        logits = fn(self.params, toks, last)
+        preds = np.asarray(jnp.argmax(logits, axis=-1))
+        return [int(preds[i]) for i in range(len(token_lists))]
+
+    def execute_requests(self, requests: List[Request], padded_len: int
+                         ) -> List[Any]:
+        """ServingSystem adapter: requests carry token payloads."""
+        return self.classify([r.payload for r in requests])
+
+    def generate(self, token_lists: Sequence[Sequence[int]],
+                 max_new_tokens: int = 16) -> List[List[int]]:
+        """Greedy decode over a ragged batch (right-padded; per-request
+        last-token gather). KV regions tracked in the slab manager.
+        SSM/hybrid families require equal prompt lengths (state would roll
+        through padding otherwise)."""
+        cfg = self.cfg
+        lens = [len(t) for t in token_lists]
+        ragged = len(set(lens)) > 1
+        if ragged and cfg.family in ("ssm", "hybrid"):
+            raise ValueError("SSM prompts must be grouped by exact length")
+        if cfg.family in ("ssm", "hybrid"):
+            prompt_b = max(lens)   # no pad: state would roll through it
+        else:
+            prompt_b = self.ladder.seq_bucket(max(lens))
+        seq_b = self.ladder.seq_bucket(max(lens) + max_new_tokens)
+        batch_b = self.ladder.batch_bucket(len(token_lists))
+        toks = np.full((batch_b, prompt_b), self.pad_id, np.int32)
+        for i, t in enumerate(token_lists):
+            toks[i, :len(t)] = t
+        true_lens = np.array(lens + [1] * (batch_b - len(lens)), np.int32)
+        per_tok = kv_bytes_per_token(cfg)
+        fixed = ssm_state_bytes(cfg)
+        req_ids = [self._next_gen_id + i for i in range(len(token_lists))]
+        self._next_gen_id += len(token_lists)
+        for rid in req_ids:
+            self.kv_slab.allocate(
+                rid, per_tok * seq_b + fixed if per_tok else max(fixed, 1))
+
+        key = (seq_b, batch_b, prompt_b)
+        if key not in self._prefill_cache:
+            rt = self.rt
+
+            @jax.jit
+            def pf(params, tokens, true_lengths):
+                return prefill(
+                    cfg, params, tokens, max_len=seq_b, rt=rt,
+                    true_lengths=(true_lengths if (cfg.family not in
+                                                   ("ssm", "hybrid"))
+                                  else None),
+                    cache_dtype=jnp.float32)
+            self._prefill_cache[key] = pf
+            self.compile_count += 1
+        logits, cache = self._prefill_cache[key](
+            self.params, jnp.asarray(toks), jnp.asarray(true_lens))
+        step = self._decode_fn()
+        outs = [list(t) for t in token_lists]
+        cur = jnp.argmax(logits, axis=-1)
+        for _ in range(max_new_tokens):
+            cur_np = np.asarray(cur)
+            for i in range(len(token_lists)):
+                outs[i].append(int(cur_np[i].reshape(-1)[0]))
+            cur_logits, cache = step(self.params, cache, cur)
+            cur = jnp.argmax(cur_logits, axis=-1)
+        for rid in req_ids:
+            self.kv_slab.free(rid)
+        self.kv_slab.gc()
+        return outs
+
+    # ------------------------------------------------------------------
+    # Warm-up (paper §5: builds cached_cost)
+    # ------------------------------------------------------------------
+    def warmup(self, lengths: Optional[Sequence[int]] = None,
+               batches: Optional[Sequence[int]] = None,
+               repeats: int = 3) -> TableCostModel:
+        lengths = list(lengths or self.ladder.seq_buckets[:4])
+        batches = list(batches or self.ladder.batch_buckets[:4])
+
+        def measure(seq_len: int, batch: int) -> float:
+            token_lists = [[1] * seq_len for _ in range(batch)]
+            self.classify(token_lists)          # compile + first run
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                self.classify(token_lists)
+            return (time.perf_counter() - t0) / repeats
+
+        return TableCostModel.warmup(measure, lengths, batches)

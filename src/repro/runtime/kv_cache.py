@@ -1,0 +1,141 @@
+"""KV-cache slab manager: the serving-time role of the paper's allocator.
+
+On GPU the paper's Algorithm 1 places *intermediate activation* tensors;
+under XLA those live inside the compiled step, so the variable-length
+memory problem moves to the KV cache: requests of wildly different lengths
+hold per-token state for their whole lifetime. We manage that state with
+the same chunked machinery — 2 MB-sized slabs, best-gap placement inside a
+chunk, chunk release when idle — which keeps footprint proportional to the
+*live* token count instead of the historical peak (paper Figs. 11/12, in
+KV form).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+
+DEFAULT_KV_CHUNK = 2 * 1024 * 1024
+K_SCALE = 1.2
+
+
+def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """Per-token cache bytes for one request (all layers)."""
+    if cfg.family == "ssm":
+        return 0   # state is O(1) in sequence length
+    kv_layers = cfg.num_layers
+    if cfg.family == "hybrid":
+        kv_layers = (cfg.num_layers // cfg.attn_every) if cfg.attn_every \
+            else 0
+    return 2 * kv_layers * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
+
+
+def ssm_state_bytes(cfg: ModelConfig, dtype_bytes: int = 4) -> int:
+    """Fixed per-request state bytes for SSM/hybrid archs."""
+    if not cfg.ssm:
+        return 0
+    di = cfg.d_inner
+    conv = (cfg.ssm.conv_kernel - 1) * di * 2
+    if cfg.ssm.variant == "mamba1":
+        state = di * cfg.ssm.state_dim * dtype_bytes
+    else:
+        state = (di // cfg.ssm.head_dim) * cfg.ssm.head_dim * \
+            cfg.ssm.state_dim * dtype_bytes
+    return cfg.num_layers * (conv + state)
+
+
+@dataclass
+class Region:
+    req_id: int
+    chunk_id: int
+    offset: int
+    size: int
+
+
+@dataclass
+class _Slab:
+    chunk_id: int
+    size: int
+    live: List[Region] = field(default_factory=list)   # sorted by offset
+
+    def best_gap(self, size: int) -> Optional[int]:
+        """Smallest gap among live regions that fits (FindGapFromChunk's
+        search, over live allocations instead of lifetime overlaps)."""
+        prev = 0
+        best: Optional[int] = None
+        best_gap = float("inf")
+        for r in sorted(self.live, key=lambda r: r.offset):
+            gap = r.offset - prev
+            if size <= gap < best_gap:
+                best_gap = gap
+                best = prev
+            prev = max(prev, r.offset + r.size)
+        if best is None and self.size - prev >= size:
+            best = prev
+        return best
+
+
+class KVSlabManager:
+    """Chunked slab allocator for per-request KV/SSM regions."""
+
+    def __init__(self, chunk_size: int = DEFAULT_KV_CHUNK,
+                 k_scale: float = K_SCALE,
+                 max_idle: int = 1) -> None:
+        self.chunk_size = chunk_size
+        self.k_scale = k_scale
+        self.max_idle = max_idle
+        self.slabs: Dict[int, _Slab] = {}
+        self._regions: Dict[int, Region] = {}
+        self._idle: Dict[int, int] = {}
+        self._next_id = 0
+        self.allocated_bytes = 0
+        self.freed_bytes = 0
+
+    def allocate(self, req_id: int, size: int) -> Region:
+        if req_id in self._regions:
+            raise KeyError(f"request {req_id} already has a region")
+        for slab in self.slabs.values():
+            off = slab.best_gap(size)
+            if off is not None:
+                region = Region(req_id, slab.chunk_id, off, size)
+                slab.live.append(region)
+                self._regions[req_id] = region
+                return region
+        cap = max(self.chunk_size, int(size * self.k_scale))
+        slab = _Slab(self._next_id, cap)
+        self._next_id += 1
+        self.slabs[slab.chunk_id] = slab
+        self.allocated_bytes += cap
+        region = Region(req_id, slab.chunk_id, 0, size)
+        slab.live.append(region)
+        self._regions[req_id] = region
+        return region
+
+    def free(self, req_id: int) -> None:
+        region = self._regions.pop(req_id)
+        slab = self.slabs[region.chunk_id]
+        slab.live.remove(region)
+
+    def gc(self) -> None:
+        """Release slabs idle for more than ``max_idle`` gc rounds."""
+        for cid in list(self.slabs):
+            slab = self.slabs[cid]
+            if slab.live:
+                self._idle[cid] = 0
+                continue
+            idles = self._idle.get(cid, 0) + 1
+            if idles > self.max_idle:
+                self.freed_bytes += slab.size
+                del self.slabs[cid]
+                self._idle.pop(cid, None)
+            else:
+                self._idle[cid] = idles
+
+    @property
+    def footprint(self) -> int:
+        return sum(s.size for s in self.slabs.values())
+
+    @property
+    def live_bytes(self) -> int:
+        return sum(r.size for r in self._regions.values())

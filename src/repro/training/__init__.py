@@ -1,0 +1,7 @@
+from repro.training.optimizer import (OptimizerConfig, apply_optimizer,
+                                      init_optimizer)
+from repro.training.train_loop import (TrainConfig, Trainer, init_state,
+                                       make_train_step)
+
+__all__ = ["OptimizerConfig", "TrainConfig", "Trainer", "apply_optimizer",
+           "init_optimizer", "init_state", "make_train_step"]

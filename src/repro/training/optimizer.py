@@ -1,0 +1,181 @@
+"""Optimizers in pure JAX: AdamW and Adafactor.
+
+Adafactor (factored second moments, no first moment) is the default for
+the 405B-class configs — optimizer state is O(rows + cols) per matrix
+instead of O(rows * cols), which is what makes llama3-405b fit a 256-chip
+v5e pod (see EXPERIMENTS.md §Dry-run). State trees are nested dicts so
+they checkpoint through `runtime.checkpoint` unchanged.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"               # adamw | adafactor
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.01
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    grad_clip_norm: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    epsilon1: float = 1e-30
+    epsilon2: float = 1e-3
+    # memory knob: dtype of (m, v) moments for adamw
+    state_dtype: str = "float32"
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params: Any, cfg: OptimizerConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params: Any, grads: Any, state: Dict[str, Any],
+                 cfg: OptimizerConfig, lr: Optional[jax.Array] = None):
+    step = state["step"] + 1
+    lr = cfg.learning_rate if lr is None else lr
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                v_new.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params: Any, cfg: OptimizerConfig) -> Dict[str, Any]:
+    def init_leaf(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"factored": jax.tree.map(
+                init_leaf, params,
+                is_leaf=lambda x: isinstance(x, jax.Array) or
+                isinstance(x, jax.ShapeDtypeStruct)),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params: Any, grads: Any, state: Dict[str, Any],
+                     cfg: OptimizerConfig, lr: Optional[jax.Array] = None):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2t = 1.0 - jnp.power(t, -cfg.decay_rate)
+    lr = cfg.learning_rate if lr is None else lr
+
+    def upd(p, g, v):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + cfg.epsilon1
+        if _factored(p.shape):
+            vr = beta2t * v["vr"] + (1 - beta2t) * jnp.mean(g2, axis=-1)
+            vc = beta2t * v["vc"] + (1 - beta2t) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                cfg.epsilon1)
+            vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+            update = gf / jnp.sqrt(vhat + cfg.epsilon1)
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vfull = beta2t * v["v"] + (1 - beta2t) * g2
+            update = gf / jnp.sqrt(vfull + cfg.epsilon1)
+            new_v = {"v": vfull}
+        # relative step-size clipping (Adafactor's d=1 trick)
+        rms = jnp.sqrt(jnp.mean(update * update) + cfg.epsilon1)
+        update = update / jnp.maximum(1.0, rms)
+        scale = lr * jnp.maximum(
+            jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32)))),
+            cfg.epsilon2)
+        p_new = p.astype(jnp.float32) - scale * update - \
+            lr * cfg.weight_decay * p.astype(jnp.float32)
+        return p_new.astype(p.dtype), new_v
+
+    is_state_leaf = lambda x: isinstance(x, dict) and \
+        ("v" in x or "vr" in x)  # noqa: E731
+    out = jax.tree.map(upd, params, grads, state["factored"],
+                       is_leaf=lambda x: isinstance(x, jax.Array))
+    # out leaves are tuples (p_new, v_dict)
+    def is_pair(x):
+        return isinstance(x, tuple) and len(x) == 2
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+    new_v = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
+    return new_params, {"factored": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Uniform interface
+# ---------------------------------------------------------------------------
+
+
+def init_optimizer(params: Any, cfg: OptimizerConfig) -> Dict[str, Any]:
+    if cfg.name == "adamw":
+        return adamw_init(params, cfg)
+    if cfg.name == "adafactor":
+        return adafactor_init(params, cfg)
+    raise ValueError(cfg.name)
+
+
+def apply_optimizer(params: Any, grads: Any, state: Dict[str, Any],
+                    cfg: OptimizerConfig, lr: Optional[jax.Array] = None):
+    if cfg.grad_clip_norm:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    if cfg.name == "adamw":
+        params, state = adamw_update(params, grads, state, cfg, lr)
+    else:
+        params, state = adafactor_update(params, grads, state, cfg, lr)
+    return params, state, gnorm

@@ -1,0 +1,172 @@
+"""Training loop substrate: jitted train_step with microbatch gradient
+accumulation, mixed precision, checkpoint/auto-resume, failure injection.
+
+Scale features:
+ - ``grad_accum`` microbatching (lax.scan over microbatches — constant
+   memory in the number of microbatches);
+ - compute in bf16 with fp32 master params (cast once per step);
+ - optional bf16 gradient all-reduce (cast before the psum the sharded
+   grads imply) — `grad_dtype`;
+ - remat policy through ModelRuntime;
+ - deterministic per-step data keys -> crash/restart reproduces the exact
+   same trajectory (tested in tests/test_checkpoint.py).
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ModelRuntime, forward_train, init_params
+from repro.models.io import synthetic_train_batch
+from repro.runtime import checkpoint as ckpt
+from repro.training.optimizer import (OptimizerConfig, apply_optimizer,
+                                      init_optimizer)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = OptimizerConfig()
+    grad_accum: int = 1
+    compute_dtype: str = "bfloat16"
+    grad_dtype: str = "float32"      # "bfloat16" = compressed grad reduce
+    param_dtype: str = "float32"
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 50
+    keep_last: int = 3
+    log_every: int = 10
+
+
+def init_state(cfg: ModelConfig, tc: TrainConfig, seed: int = 0
+               ) -> Dict[str, Any]:
+    params = init_params(cfg, jax.random.key(seed),
+                         param_dtype=tc.param_dtype)
+    opt = init_optimizer(params, tc.optimizer)
+    return {"params": params, "opt": opt,
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig,
+                    rt: ModelRuntime = ModelRuntime()) -> Callable:
+    """Returns step(state, batch) -> (state, metrics). jit-able; batch dims
+    are (grad_accum * micro_batch, ...) and are split for accumulation."""
+    compute_dt = jnp.dtype(tc.compute_dtype)
+    grad_dt = jnp.dtype(tc.grad_dtype)
+
+    def loss_fn(params, micro):
+        cparams = jax.tree.map(
+            lambda p: p.astype(compute_dt)
+            if p.dtype in (jnp.float32, jnp.bfloat16) else p, params)
+        loss, metrics = forward_train(cfg, cparams, micro, rt=rt)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def split_micro(batch, i):
+        def slice_leaf(x):
+            mb = x.shape[0] // tc.grad_accum
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+        return jax.tree.map(slice_leaf, batch)
+
+    def step(state, batch):
+        params = state["params"]
+
+        if tc.grad_accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def accum(carry, i):
+                gsum, lsum = carry
+                (loss, _), g = grad_fn(params, split_micro(batch, i))
+                g = jax.tree.map(lambda a, b: a + b.astype(grad_dt),
+                                 gsum, g)
+                return (g, lsum + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, grad_dt), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                accum, (g0, jnp.zeros((), jnp.float32)),
+                jnp.arange(tc.grad_accum))
+            grads = jax.tree.map(lambda g: g / tc.grad_accum, grads)
+            loss = loss_sum / tc.grad_accum
+            metrics = {"loss": loss, "aux_loss": jnp.zeros(()),
+                       "perplexity": jnp.exp(jnp.minimum(loss, 20.0))}
+
+        grads = jax.tree.map(lambda g: g.astype(grad_dt), grads)
+        new_params, new_opt, gnorm = apply_optimizer(
+            params, grads, state["opt"], tc.optimizer)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return step
+
+
+@dataclass
+class Trainer:
+    """Checkpointed training driver with crash-recovery semantics."""
+    cfg: ModelConfig
+    tc: TrainConfig
+    rt: ModelRuntime = ModelRuntime()
+    batch_size: int = 8
+    seq_len: int = 128
+    seed: int = 0
+    fail_at_step: Optional[int] = None    # failure injection (tests)
+
+    def __post_init__(self):
+        self._step_fn = jax.jit(make_train_step(self.cfg, self.tc, self.rt))
+
+    def data_for_step(self, step: int) -> Dict[str, Any]:
+        # deterministic per-step key -> restart-reproducible trajectory
+        key = jax.random.fold_in(jax.random.key(self.seed + 7), step)
+        return synthetic_train_batch(self.cfg, key, self.batch_size,
+                                     self.seq_len)
+
+    def restore_or_init(self) -> Dict[str, Any]:
+        if self.tc.checkpoint_dir:
+            latest = ckpt.load_latest(self.tc.checkpoint_dir)
+            if latest is not None:
+                step, tree, _ = latest
+                state = init_state(self.cfg, self.tc, self.seed)
+                state = jax.tree.map(
+                    lambda ref, loaded: jnp.asarray(loaded, ref.dtype),
+                    state, tree)
+                return state
+        return init_state(self.cfg, self.tc, self.seed)
+
+    def run(self, num_steps: int,
+            on_metrics: Optional[Callable[[int, Dict], None]] = None
+            ) -> Dict[str, Any]:
+        state = self.restore_or_init()
+        start = int(state["step"])
+        pending_save = None
+        for step in range(start, num_steps):
+            if self.fail_at_step is not None and step == self.fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+            batch = self.data_for_step(step)
+            state, metrics = self._step_fn(state, batch)
+            if on_metrics and (step + 1) % self.tc.log_every == 0:
+                on_metrics(step + 1,
+                           {k: float(v) for k, v in metrics.items()})
+            if self.tc.checkpoint_dir and \
+                    (step + 1) % self.tc.checkpoint_every == 0:
+                if pending_save is not None:
+                    pending_save.join()
+                pending_save = ckpt.save_async(
+                    self.tc.checkpoint_dir, step + 1, state,
+                    metadata={"arch": self.cfg.name},
+                    keep_last=self.tc.keep_last)
+        if pending_save is not None:
+            pending_save.join()
+        if self.tc.checkpoint_dir and int(state["step"]) not in \
+                ckpt.available_steps(self.tc.checkpoint_dir):
+            ckpt.save(self.tc.checkpoint_dir, int(state["step"]), state,
+                      metadata={"arch": self.cfg.name},
+                      keep_last=self.tc.keep_last)
+        return state

@@ -1,0 +1,15 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the real (single) device; only launch/dryrun.py
+fakes 512 devices, and multi-device tests spawn subprocesses."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+    return jax.random.key(0)

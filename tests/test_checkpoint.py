@@ -1,0 +1,95 @@
+"""Fault tolerance: checkpoint atomicity, keep-k, crash/auto-resume
+bitwise-reproducibility, async save, elastic reshard-on-load."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.runtime import checkpoint as ckpt
+from repro.training import OptimizerConfig, TrainConfig, Trainer
+
+
+def tree_equal(a, b):
+    la = jax.tree.leaves(a)
+    lb = jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def test_save_load_roundtrip(tmp_path):
+    tree = {"a": {"b": jnp.arange(6).reshape(2, 3)},
+            "c": jnp.float32(3.5),
+            "d": {"e": {"f": jnp.ones((4,), jnp.bfloat16)}}}
+    ckpt.save(str(tmp_path), 7, tree, metadata={"note": "x"})
+    loaded, manifest = ckpt.load(str(tmp_path), 7)
+    assert manifest["step"] == 7 and manifest["metadata"]["note"] == "x"
+    assert tree_equal(tree, loaded)
+    # dtypes preserved
+    assert loaded["d"]["e"]["f"].dtype == np.dtype("bfloat16") or \
+        str(loaded["d"]["e"]["f"].dtype) == "bfloat16"
+
+
+def test_keep_last_gc(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    for step in range(6):
+        ckpt.save(str(tmp_path), step, tree, keep_last=3)
+    assert ckpt.available_steps(str(tmp_path)) == [3, 4, 5]
+
+
+def test_no_tmp_dirs_left_behind(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"x": jnp.zeros((2,))})
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_async_save(tmp_path):
+    t = ckpt.save_async(str(tmp_path), 2, {"x": jnp.arange(3)})
+    t.join()
+    loaded, _ = ckpt.load(str(tmp_path), 2)
+    assert np.array_equal(loaded["x"], np.arange(3))
+
+
+def test_crash_resume_is_bitwise_identical(tmp_path):
+    cfg = get_smoke_config("internlm2-1.8b")
+
+    def make(d, fail_at=None):
+        tc = TrainConfig(optimizer=OptimizerConfig(learning_rate=1e-3),
+                         compute_dtype="float32",
+                         checkpoint_dir=str(d), checkpoint_every=4,
+                         log_every=100)
+        return Trainer(cfg, tc, batch_size=2, seq_len=16, seed=0,
+                       fail_at_step=fail_at)
+
+    d1 = tmp_path / "uninterrupted"
+    d2 = tmp_path / "crashed"
+    ref = make(d1).run(10)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        make(d2, fail_at=6).run(10)
+    # async save may still be in flight at crash time; wait for the
+    # durable step-4 checkpoint to land before "restarting the node"
+    import time
+    deadline = time.time() + 30
+    while time.time() < deadline and \
+            ckpt.available_steps(str(d2)) != [4]:
+        time.sleep(0.2)
+    assert ckpt.available_steps(str(d2)) == [4]     # survived the crash
+    resumed = make(d2).run(10)                       # auto-resume from 4
+    assert tree_equal(ref["params"], resumed["params"])
+    assert int(resumed["step"]) == 10
+
+
+def test_reshard_on_load(tmp_path):
+    """Elastic scaling: load a checkpoint and re-place leaves with a new
+    sharding policy (single-device here; the policy function is what the
+    multi-host path reuses)."""
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ckpt.save(str(tmp_path), 1, tree)
+    loaded, _ = ckpt.load(str(tmp_path), 1)
+    dev = jax.devices()[0]
+    placed = ckpt.reshard(
+        loaded, lambda path, arr: jax.sharding.SingleDeviceSharding(dev))
+    assert placed["w"].sharding == jax.sharding.SingleDeviceSharding(dev)
+    assert np.array_equal(np.asarray(placed["w"]), np.asarray(tree["w"]))

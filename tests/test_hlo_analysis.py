@@ -1,0 +1,71 @@
+"""Loop-aware HLO analyzer validation against hand-computable programs."""
+import subprocess
+import sys
+import os
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyze, parse_module
+
+
+def test_plain_matmul_flops():
+    def f(a, b):
+        return a @ b
+    c = jax.jit(f).lower(jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                         jax.ShapeDtypeStruct((128, 32), jnp.float32)
+                         ).compile()
+    p = analyze(c.as_text())
+    assert p.flops == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+
+
+def test_scan_multiplies_trip_count():
+    def f(w, x):
+        def body(h, wl):
+            return jnp.tanh(h @ wl), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((10, 64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((8, 64), jnp.float32)).compile()
+    p = analyze(c.as_text())
+    assert p.flops == pytest.approx(10 * 2 * 8 * 64 * 64, rel=0.01)
+    # XLA's own analysis undercounts by the trip count
+    assert c.cost_analysis()["flops"] < p.flops / 5
+
+
+def test_nested_scan():
+    def f(w, x):
+        def outer(h, wl):
+            def inner(g, _):
+                return jnp.tanh(g @ wl), None
+            g, _ = jax.lax.scan(inner, h, None, length=3)
+            return g, None
+        h, _ = jax.lax.scan(outer, x, w)
+        return h
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((5, 32, 32), jnp.float32),
+        jax.ShapeDtypeStruct((4, 32), jnp.float32)).compile()
+    p = analyze(c.as_text())
+    assert p.flops == pytest.approx(5 * 3 * 2 * 4 * 32 * 32, rel=0.01)
+
+
+def test_hbm_bytes_order_of_magnitude():
+    def f(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    c = jax.jit(f).lower(a, a).compile()
+    p = analyze(c.as_text())
+    # 2 inputs + 1 output = 3 MB; allow fusion bookkeeping slack
+    assert 2e6 < p.hbm_bytes < 1e7
+
+
+def test_parser_handles_tuples_and_entry():
+    def f(a):
+        return a + 1, a * 2
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile()
+    comps = parse_module(c.as_text())
+    assert "__entry__" in comps

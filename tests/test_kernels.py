@@ -1,0 +1,180 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs the
+pure-jnp oracle in ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _assert_close(got, want, dtype):
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# fused softmax
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,cols", [(8, 128), (16, 256), (33, 200),
+                                       (7, 1000), (128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("with_lengths", [False, True])
+def test_softmax_kernel(rows, cols, dtype, with_lengths):
+    x = jax.random.normal(jax.random.key(rows * cols), (rows, cols)
+                          ).astype(dtype)
+    lengths = None
+    if with_lengths:
+        lengths = jax.random.randint(jax.random.key(7), (rows,), 1,
+                                     cols + 1)
+    want = ref.softmax_ref(x, lengths, 0.7)
+    got = ops.fused_softmax(x, lengths, scale=0.7, impl="interpret")
+    _assert_close(got, want, dtype)
+    # rows sum to one over the valid region
+    s = np.asarray(got, np.float32).sum(-1)
+    np.testing.assert_allclose(s, 1.0, rtol=1e-2)
+
+
+def test_softmax_xla_path_matches():
+    x = jax.random.normal(jax.random.key(0), (16, 96))
+    got = ops.fused_softmax(x, impl="xla")
+    want = jax.nn.softmax(x, axis=-1)
+    _assert_close(got, want, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# fused layernorm / rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,cols", [(8, 128), (10, 100), (64, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("with_bias", [False, True])
+@pytest.mark.parametrize("with_residual", [False, True])
+def test_layernorm_kernel(rows, cols, dtype, with_bias, with_residual):
+    ks = jax.random.split(jax.random.key(rows + cols), 5)
+    x = jax.random.normal(ks[0], (rows, cols)).astype(dtype)
+    g = jax.random.normal(ks[1], (cols,)).astype(dtype)
+    b = jax.random.normal(ks[2], (cols,)).astype(dtype)
+    bias = jax.random.normal(ks[3], (cols,)).astype(dtype) \
+        if with_bias else None
+    res = jax.random.normal(ks[4], (rows, cols)).astype(dtype) \
+        if with_residual else None
+    want, want_s = ref.layernorm_ref(x, g, b, bias, res, 1e-6, True)
+    got, got_s = ops.fused_layernorm(x, g, b, bias, res,
+                                     return_residual=True,
+                                     impl="interpret")
+    _assert_close(got, want, dtype)
+    _assert_close(got_s, want_s, dtype)
+
+
+@pytest.mark.parametrize("rows,cols", [(8, 128), (12, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_kernel(rows, cols, dtype):
+    ks = jax.random.split(jax.random.key(cols), 2)
+    x = jax.random.normal(ks[0], (rows, cols)).astype(dtype)
+    g = jax.random.normal(ks[1], (cols,)).astype(dtype)
+    want = ref.rmsnorm_ref(x, g)
+    got = ops.fused_rmsnorm(x, g, impl="interpret")
+    _assert_close(got, want, dtype)
+
+
+def test_layernorm_single_pass_variance_matches_two_pass():
+    """Paper Eq. 1: E(x^2)-E(x)^2 must equal E((x-E x)^2) numerically for
+    well-scaled inputs."""
+    x = jax.random.normal(jax.random.key(5), (32, 777))
+    g = jnp.ones((777,))
+    b = jnp.zeros((777,))
+    got = ref.layernorm_ref(x, g, b)
+    xf = np.asarray(x, np.float64)
+    mean = xf.mean(-1, keepdims=True)
+    var = ((xf - mean) ** 2).mean(-1, keepdims=True)
+    want = (xf - mean) / np.sqrt(var + 1e-6)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,kv,s,dh,bq,bk", [
+    (2, 4, 2, 128, 32, 32, 32),     # GQA
+    (1, 2, 2, 96, 64, 32, 32),      # MHA, ragged block edge
+    (2, 8, 1, 64, 16, 16, 32),      # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel(b, h, kv, s, dh, bq, bk, dtype):
+    ks = jax.random.split(jax.random.key(s + h), 3)
+    q = jax.random.normal(ks[0], (b, h, s, dh)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, dh)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, dh)).astype(dtype)
+    lengths = jnp.array([s] + [s // 2] * (b - 1))
+    want = ref.flash_attention_ref(q, k, v, lengths, True)
+    got = ops.flash_attention(q, k, v, lengths, causal=True,
+                              impl="interpret", block_q=bq, block_k=bk)
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+def test_flash_attention_decode_shape():
+    """Sq < Sk (extend/decode): queries sit at the end of the kv window."""
+    b, h, kv, sk, sq, dh = 2, 4, 4, 128, 8, 32
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (b, h, sq, dh))
+    k = jax.random.normal(ks[1], (b, kv, sk, dh))
+    v = jax.random.normal(ks[2], (b, kv, sk, dh))
+    want = ref.flash_attention_ref(q, k, v, None, True)
+    got = ops.flash_attention(q, k, v, causal=True, impl="interpret",
+                              block_q=8, block_k=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("b,h,kv,s,dh,splits,bk", [
+    (2, 4, 2, 250, 32, 3, 64),      # uneven split + partial block
+    (2, 4, 2, 256, 32, 4, 64),      # exact cover
+    (1, 8, 1, 512, 64, 4, 128),     # MQA long cache
+    (2, 2, 2, 128, 32, 1, 128),     # single split == sequential flash
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_kernel(b, h, kv, s, dh, splits, bk, dtype):
+    """Split-K decode attention (the serving hot loop; §Perf cell C's
+    projected kernel) vs the oracle, incl. variable cache lengths."""
+    ks = jax.random.split(jax.random.key(s + splits), 3)
+    q = jax.random.normal(ks[0], (b, h, dh)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, dh)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, dh)).astype(dtype)
+    lengths = jnp.array([s] + [max(s // 3, 1)] * (b - 1))
+    want = ref.flash_attention_ref(q[:, :, None, :], k, v, lengths,
+                                   causal=False)[:, :, 0]
+    got = ops.flash_decode(q, k, v, lengths, num_splits=splits,
+                           block_k=bk, impl="interpret")
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+def test_flash_matches_model_chunked_attention():
+    """The kernel agrees with the model's XLA chunked-attention path."""
+    from repro.configs import get_smoke_config
+    from repro.models.layers import attention_chunked
+    cfg = get_smoke_config("qwen3-32b")
+    b, s, h, kvh, dh = 2, 64, 4, 2, 16
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, kvh, dh))
+    v = jax.random.normal(ks[2], (b, s, kvh, dh))
+    want = attention_chunked(cfg, q, k, v, q_block=16, kv_block=16)
+    got = ops.flash_attention(
+        jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
+        causal=True, impl="interpret", block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(jnp.moveaxis(got, 1, 2)),
+                               np.asarray(want), rtol=3e-4, atol=3e-4)

@@ -1,0 +1,135 @@
+"""Runtime substrate tests: bucketing, KV slab manager, generation, cost
+model warm-up, usage-record extraction on a transformer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, get_smoke_config
+from repro.core import records_for_fn, SequenceAwareAllocator, validate_plan
+from repro.models import init_params, forward_hidden
+from repro.runtime import (BucketLadder, InferenceEngine, KVSlabManager,
+                           kv_bytes_per_token, ssm_state_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Bucketing
+# ---------------------------------------------------------------------------
+
+def test_bucket_ladder_basic():
+    bl = BucketLadder(seq_buckets=(32, 64, 128), batch_buckets=(1, 2, 4))
+    assert bl.seq_bucket(1) == 32
+    assert bl.seq_bucket(32) == 32
+    assert bl.seq_bucket(33) == 64
+    with pytest.raises(ValueError):
+        bl.seq_bucket(1000)
+    assert bl.padding_waste([32, 32]) == pytest.approx(0.0)
+    assert 0.0 < bl.padding_waste([5, 60]) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# KV slab manager
+# ---------------------------------------------------------------------------
+
+def test_kv_slab_alloc_free_reuse():
+    m = KVSlabManager(chunk_size=1 << 20, max_idle=0)
+    r1 = m.allocate(1, 1 << 19)
+    r2 = m.allocate(2, 1 << 19)
+    assert r1.chunk_id == r2.chunk_id      # share a slab
+    assert m.footprint == 1 << 20
+    m.free(1)
+    r3 = m.allocate(3, 1 << 19)
+    assert (r3.chunk_id, r3.offset) == (r1.chunk_id, r1.offset)  # reused
+    m.free(2)
+    m.free(3)
+    m.gc()
+    assert m.footprint == 0                # slabs released when idle
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 1 << 21)),
+                min_size=1, max_size=60))
+def test_kv_slab_property_no_overlap(ops):
+    m = KVSlabManager(chunk_size=1 << 20)
+    live = {}
+    next_id = 0
+    for is_alloc, size in ops:
+        if is_alloc or not live:
+            r = m.allocate(next_id, size)
+            live[next_id] = r
+            next_id += 1
+        else:
+            rid = next(iter(live))
+            m.free(rid)
+            del live[rid]
+        # invariant: live regions within a slab never overlap
+        by_chunk = {}
+        for r in live.values():
+            by_chunk.setdefault(r.chunk_id, []).append(r)
+        for regions in by_chunk.values():
+            regions.sort(key=lambda r: r.offset)
+            for a, b in zip(regions, regions[1:]):
+                assert a.offset + a.size <= b.offset
+    assert m.live_bytes == sum(r.size for r in live.values())
+
+
+def test_kv_bytes_per_token_by_family():
+    assert kv_bytes_per_token(get_config("falcon-mamba-7b")) == 0
+    assert ssm_state_bytes(get_config("falcon-mamba-7b")) > 0
+    dense = kv_bytes_per_token(get_config("internlm2-1.8b"))
+    assert dense == 2 * 24 * 8 * 128 * 2
+    hybrid = kv_bytes_per_token(get_config("zamba2-1.2b"))
+    assert 0 < hybrid < kv_bytes_per_token(get_config("musicgen-large"))
+
+
+# ---------------------------------------------------------------------------
+# Engine generation + slab integration
+# ---------------------------------------------------------------------------
+
+def test_generate_tracks_and_releases_kv(rng_key):
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.key(0))
+    eng = InferenceEngine(cfg, params, ladder=BucketLadder(
+        seq_buckets=(32, 64), batch_buckets=(1, 2, 4)))
+    outs = eng.generate([[1, 2, 3], [4, 5, 6, 7, 8]], max_new_tokens=3)
+    assert [len(o) for o in outs] == [6, 8]
+    assert eng.kv_slab.live_bytes == 0     # released after generation
+    # ragged == isolated
+    iso = eng.generate([[1, 2, 3]], max_new_tokens=3)
+    assert outs[0] == iso[0]
+
+
+def test_warmup_builds_monotone_cost_table():
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.key(0))
+    eng = InferenceEngine(cfg, params, ladder=BucketLadder(
+        seq_buckets=(32, 64, 128), batch_buckets=(1, 2, 4)))
+    cm = eng.warmup(lengths=(32, 128), batches=(1, 4), repeats=1)
+    assert cm.latency(128, 4) > 0
+    # more work should not be cheaper (generous slack for CPU noise)
+    assert cm.latency(128, 4) > 0.3 * cm.latency(32, 1)
+
+
+# ---------------------------------------------------------------------------
+# Usage records from a real transformer graph (C2 input)
+# ---------------------------------------------------------------------------
+
+def test_usage_records_from_transformer_scale_with_length():
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.key(0))
+
+    def fwd(tokens):
+        h, _, _ = forward_hidden(cfg, params, tokens)
+        return h
+
+    alloc = SequenceAwareAllocator()
+    footprints = []
+    for seq in (16, 64):
+        toks = jnp.ones((1, seq), jnp.int32)
+        recs = records_for_fn(fwd, toks, min_size=256)
+        assert len(recs) > 3
+        plan = alloc.plan(recs)
+        validate_plan(recs, plan)
+        footprints.append(plan.footprint)
+    assert footprints[1] >= footprints[0]   # longer seq -> >= footprint

@@ -1,0 +1,98 @@
+"""DP batch scheduler (paper Algorithm 2) unit + property tests."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AnalyticCostModel, BucketedCostModel,
+                        TableCostModel, brute_force_schedule, dp_schedule,
+                        naive_schedule, nobatch_schedule)
+
+CM = AnalyticCostModel(flops_per_token=2e9, bytes_per_token=1e5,
+                       weight_bytes=2e8, overhead=3e-4)
+
+
+def plan_cost(lengths, plan, cm):
+    total = 0.0
+    seen = []
+    for batch in plan.batches:
+        seen.extend(batch)
+        total += cm.latency(max(lengths[i] for i in batch), len(batch))
+    assert sorted(seen) == list(range(len(lengths)))   # exact partition
+    return total
+
+
+def test_paper_fig8_example_beats_baselines():
+    lengths = [17, 18, 52, 63, 77]
+    dp = dp_schedule(lengths, CM)
+    assert dp.total_cost <= naive_schedule(lengths, CM).total_cost
+    assert dp.total_cost <= nobatch_schedule(lengths, CM).total_cost
+    assert 1 < dp.num_batches < len(lengths)   # batches, but not one blob
+
+
+def test_dp_batches_are_contiguous_in_sorted_order():
+    lengths = [40, 3, 77, 8, 52, 9]
+    dp = dp_schedule(lengths, CM)
+    order = sorted(range(len(lengths)), key=lambda i: lengths[i])
+    flat = [i for b in dp.batches for i in b]
+    assert flat == order
+
+
+def test_max_batch_size_respected():
+    lengths = [10] * 30
+    dp = dp_schedule(lengths, CM, max_batch_size=8)
+    assert max(len(b) for b in dp.batches) <= 8
+
+
+def test_reported_cost_matches_recomputation():
+    lengths = [5, 100, 42, 42, 17, 88]
+    dp = dp_schedule(lengths, CM)
+    assert math.isclose(dp.total_cost, plan_cost(lengths, dp, CM),
+                        rel_tol=1e-9)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(1, 500), min_size=1, max_size=9))
+def test_property_dp_is_optimal(lengths):
+    dp = dp_schedule(lengths, CM)
+    bf = brute_force_schedule(lengths, CM)
+    assert dp.total_cost <= bf.total_cost + 1e-12
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(1, 500), min_size=1, max_size=20))
+def test_property_dp_beats_baselines(lengths):
+    dp = dp_schedule(lengths, CM)
+    assert dp.total_cost <= naive_schedule(lengths, CM).total_cost + 1e-12
+    assert dp.total_cost <= nobatch_schedule(lengths, CM).total_cost + 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 500), min_size=1, max_size=16),
+       st.integers(1, 8))
+def test_property_partition_valid(lengths, max_b):
+    dp = dp_schedule(lengths, CM, max_batch_size=max_b)
+    plan_cost(lengths, dp, CM)          # asserts exact partition
+    assert max(len(b) for b in dp.batches) <= max_b
+
+
+def test_table_cost_model_interpolates():
+    table = {(32, 1): 1e-3, (32, 8): 4e-3, (128, 1): 3e-3, (128, 8): 9e-3}
+    cm = TableCostModel(table)
+    assert cm.latency(32, 1) == pytest.approx(1e-3)
+    mid = cm.latency(80, 4)
+    assert 1e-3 < mid < 9e-3
+    cm.observe(32, 1, 2e-3)
+    assert cm.latency(32, 1) > 1e-3     # EMA moved
+
+
+def test_bucketed_cost_model_is_step_function():
+    cm = BucketedCostModel(CM, buckets=(32, 64, 128))
+    assert cm.latency(33, 4) == cm.latency(64, 4)
+    assert cm.latency(64, 4) < cm.latency(65, 4)
+
+
+def test_degenerate_inputs():
+    assert dp_schedule([], CM).batches == ()
+    one = dp_schedule([42], CM)
+    assert one.batches == ((0,),)

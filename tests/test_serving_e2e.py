@@ -1,0 +1,148 @@
+"""End-to-end serving behaviour: a real (tiny) model through
+MQ -> scheduler -> engine, plus the discrete-event simulator's paper-level
+claims (DP > naive > nobatch throughput; naive < nobatch on high-variance
+lengths)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (AnalyticCostModel, BucketedCostModel, Request,
+                        ResponseCache, ServingConfig, ServingSystem,
+                        SimConfig, Workload, critical_point, simulate)
+from repro.data import LengthDistribution, RequestGenerator
+from repro.models import init_params
+from repro.runtime import BucketLadder, InferenceEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.key(0))
+    ladder = BucketLadder(seq_buckets=(32, 64, 128),
+                          batch_buckets=(1, 2, 4, 8))
+    return InferenceEngine(cfg, params, ladder=ladder)
+
+
+def test_engine_batch_invariance(engine):
+    """Classification results must not depend on batch composition."""
+    reqs = [[1, 2, 3, 4], [7] * 20, [5, 6]]
+    together = engine.classify(reqs)
+    alone = [engine.classify([r])[0] for r in reqs]
+    assert together == alone
+
+
+def test_engine_compile_cache_bounded(engine):
+    before = engine.compile_count
+    for ln in (3, 5, 9, 17, 30):       # all within the 32-bucket
+        engine.classify([[1] * ln])
+    assert engine.compile_count <= before + 1
+
+
+def test_serving_system_end_to_end(engine):
+    cost = BucketedCostModel(
+        AnalyticCostModel(flops_per_token=1e6, bytes_per_token=1e3,
+                          weight_bytes=1e6, overhead=1e-4),
+        buckets=(32, 64, 128))
+    gen = RequestGenerator(rate=500, lengths=LengthDistribution(
+        "uniform", 2, 60), vocab_size=250, seed=3)
+    reqs = gen.generate(duration=0.06)
+    assert len(reqs) >= 8
+    sys_ = ServingSystem(execute=engine.execute_requests, cost_model=cost,
+                         config=ServingConfig(policy="dp",
+                                              max_batch_size=8))
+    for r in reqs:
+        sys_.submit(r)
+    sys_.drain()
+    assert len(sys_.responses) == len(reqs)
+    assert {r.req_id for r in sys_.responses} == {r.req_id for r in reqs}
+    # per-request results match direct engine execution
+    direct = [engine.classify([r.payload])[0] for r in reqs]
+    by_id = {r.req_id: r.result for r in sys_.responses}
+    for r, want in zip(reqs, direct):
+        assert by_id[r.req_id] == want
+
+
+def test_response_cache_hits():
+    cache = ResponseCache(capacity=2)
+    cache.put("a", 1)
+    cache.put("b", 2)
+    assert cache.get("a") == 1
+    cache.put("c", 3)                   # evicts LRU ("b")
+    assert cache.get("b") is None
+    assert cache.hits == 1 and cache.misses == 1
+
+
+def test_serving_cache_short_circuits(engine):
+    cost = AnalyticCostModel(flops_per_token=1e6, bytes_per_token=1e3,
+                             weight_bytes=1e6)
+    sys_ = ServingSystem(execute=engine.execute_requests, cost_model=cost,
+                         config=ServingConfig(policy="dp",
+                                              enable_cache=True))
+    payload = [1, 2, 3]
+    sys_.submit(Request(0, 3, 0.0, payload))
+    sys_.drain()
+    resp = sys_.submit(Request(1, 3, 0.0, payload))
+    assert resp is not None and resp.cached
+
+
+# ---------------------------------------------------------------------------
+# Simulator: paper §6.3 claims
+# ---------------------------------------------------------------------------
+
+# BERT-base-on-RTX2060-like analytic model (order-of-magnitude)
+SIM_CM = AnalyticCostModel(
+    flops_per_token=2 * 110e6, bytes_per_token=2e4, weight_bytes=2.2e8,
+    overhead=1.2e-3, peak_flops=6.5e12, hbm_bw=336e9)
+
+RATES = [25, 50, 100, 150, 200, 300, 400, 600]
+
+
+def test_dp_achieves_best_critical_point_short_lengths():
+    """Fig. 15 (lengths 2-100): dp >= naive >= nobatch."""
+    cps = {pol: critical_point(RATES, SIM_CM, SimConfig(policy=pol),
+                               duration=15.0, len_min=2, len_max=100)
+           for pol in ("nobatch", "naive", "dp")}
+    assert cps["dp"] >= cps["naive"] >= cps["nobatch"]
+    assert cps["dp"] > cps["nobatch"]
+
+
+def test_naive_batching_loses_on_high_variance_lengths():
+    """Fig. 16 (lengths 5-500): zero-padding makes naive batching WORSE
+    than no batching; dp still wins."""
+    cps = {pol: critical_point(RATES, SIM_CM, SimConfig(policy=pol),
+                               duration=15.0, len_min=5, len_max=500)
+           for pol in ("nobatch", "naive", "dp")}
+    assert cps["dp"] >= cps["nobatch"]
+    assert cps["naive"] <= cps["nobatch"]
+
+
+def test_simulator_latency_monotone_in_rate():
+    lat = []
+    for rate in (25, 100, 200):
+        wl = Workload(rate=rate, duration=15.0, len_min=2, len_max=100,
+                      seed=1)
+        res = simulate(wl, SIM_CM, SimConfig(policy="dp"))
+        lat.append(res.latency_stats()[0])
+    assert lat[0] <= lat[-1] * 1.5     # roughly non-decreasing
+
+
+def test_straggler_mitigation_improves_tail():
+    wl = Workload(rate=100, duration=15.0, len_min=2, len_max=100, seed=2)
+    base = simulate(wl, SIM_CM, SimConfig(
+        policy="dp", straggler_prob=0.05, mitigate_stragglers=False))
+    mitigated = simulate(wl, SIM_CM, SimConfig(
+        policy="dp", straggler_prob=0.05, mitigate_stragglers=True))
+    assert mitigated.latency_stats()[2] <= base.latency_stats()[2]
+
+
+def test_multi_replica_scales_throughput():
+    rates = [100, 200, 400, 800, 1200]
+    cp1 = critical_point(rates, SIM_CM, SimConfig(policy="dp",
+                                                  num_replicas=1),
+                         duration=10.0)
+    cp4 = critical_point(rates, SIM_CM, SimConfig(policy="dp",
+                                                  num_replicas=4),
+                         duration=10.0)
+    assert cp4 >= 2 * cp1

@@ -1,0 +1,104 @@
+"""Additional serving-framework coverage: lazy strategy, SLO trigger,
+data pipeline determinism, cost-model properties."""
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AnalyticCostModel, BucketedCostModel, Request,
+                        ServingConfig, ServingSystem)
+from repro.data import LengthDistribution, RequestGenerator, TokenStream
+from repro.configs import get_smoke_config
+
+CM = AnalyticCostModel(flops_per_token=1e6, bytes_per_token=1e3,
+                       weight_bytes=1e6, overhead=1e-4)
+
+
+def _system(**cfg):
+    calls = []
+
+    def execute(batch, padded):
+        calls.append([r.req_id for r in batch])
+        return [0] * len(batch)
+
+    clock = {"t": 0.0}
+    sys_ = ServingSystem(execute, CM,
+                         ServingConfig(**cfg),
+                         clock=lambda: clock["t"])
+    return sys_, calls, clock
+
+
+def test_lazy_strategy_waits_for_batch_or_timeout():
+    sys_, calls, clock = _system(policy="dp", strategy="lazy",
+                                 max_batch_size=4, lazy_timeout=1.0)
+    for i in range(3):
+        sys_.submit(Request(i, 10, clock["t"]))
+        sys_.step()
+    assert calls == []                      # below batch size, no timeout
+    sys_.submit(Request(3, 10, clock["t"]))
+    sys_.step()                             # 4 requests = max batch
+    assert sum(len(c) for c in calls) == 4
+
+
+def test_lazy_timeout_flushes_partial_batch():
+    sys_, calls, clock = _system(policy="dp", strategy="lazy",
+                                 max_batch_size=8, lazy_timeout=0.5)
+    sys_.submit(Request(0, 10, clock["t"]))
+    sys_.step()
+    assert calls == []
+    clock["t"] += 1.0                       # past the timeout
+    sys_.step()
+    assert sum(len(c) for c in calls) == 1
+
+
+def test_slo_trigger_flushes_early():
+    sys_, calls, clock = _system(policy="dp", strategy="lazy",
+                                 max_batch_size=64, lazy_timeout=100.0,
+                                 slo_latency=2e-4)
+    sys_.submit(Request(0, 500, clock["t"]))
+    sys_.step()     # estimated exec latency (~1e-4s) > slo/2 -> flush now
+    assert sum(len(c) for c in calls) == 1
+
+
+def test_request_generator_deterministic():
+    g1 = RequestGenerator(rate=100, seed=5).generate(0.5)
+    g2 = RequestGenerator(rate=100, seed=5).generate(0.5)
+    assert [(r.req_id, r.seq_len, r.arrival_time) for r in g1] == \
+        [(r.req_id, r.seq_len, r.arrival_time) for r in g2]
+    g3 = RequestGenerator(rate=100, seed=6).generate(0.5)
+    assert [r.seq_len for r in g1] != [r.seq_len for r in g3]
+
+
+def test_length_distributions():
+    import random
+    rng = random.Random(0)
+    uni = LengthDistribution("uniform", 5, 500)
+    assert all(5 <= uni.sample(rng) <= 500 for _ in range(100))
+    bi = LengthDistribution("bimodal", 5, 500)
+    vals = [bi.sample(rng) for _ in range(200)]
+    assert min(vals) <= 15 and max(vals) >= 490
+    assert LengthDistribution("fixed", 5, 128).sample(rng) == 128
+
+
+def test_token_stream_restart_reproducible():
+    cfg = get_smoke_config("internlm2-1.8b")
+    s1 = TokenStream(cfg, batch_size=2, seq_len=16, seed=3)
+    s2 = TokenStream(cfg, batch_size=2, seq_len=16, seed=3)
+    import numpy as np
+    b1 = s1.batch(7)
+    b2 = s2.batch(7)
+    assert np.array_equal(np.asarray(b1["tokens"]),
+                          np.asarray(b2["tokens"]))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 2000), st.integers(1, 64))
+def test_analytic_cost_model_monotone(seq, batch):
+    cm = AnalyticCostModel(flops_per_token=1e8, bytes_per_token=1e4,
+                           weight_bytes=1e8)
+    assert cm.latency(seq, batch) > 0
+    assert cm.latency(seq + 1, batch) >= cm.latency(seq, batch)
+    assert cm.latency(seq, batch + 1) >= cm.latency(seq, batch)
+    # amortization: per-request cost never increases with batch size
+    assert cm.per_request(seq, batch + 1) <= \
+        cm.per_request(seq, batch) + 1e-12
