@@ -66,6 +66,29 @@ def run() -> None:
     emit("fig9_compiled_cells", 0.0,
          f"turbo={turbo.compile_count}_of_{ladder.num_cells()}max")
 
+    # Decode hot path: per-token device->host sync (pre-refactor loop)
+    # vs on-device token accumulation with a single end-of-flush
+    # transfer.  Reported as generated tokens/s.
+    prompts = [[1] * 24] * 4
+    new_tokens = 32
+    for sync in (True, False):        # warm both compiled paths
+        turbo.generate(prompts, max_new_tokens=new_tokens,
+                       per_token_host_sync=sync)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        turbo.generate(prompts, max_new_tokens=new_tokens,
+                       per_token_host_sync=True)
+    synced = (time.perf_counter() - t0) / 3
+    t0 = time.perf_counter()
+    for _ in range(3):
+        turbo.generate(prompts, max_new_tokens=new_tokens)
+    fused = (time.perf_counter() - t0) / 3
+    toks = len(prompts) * new_tokens
+    emit("decode_per_token_host_sync", synced,
+         f"{toks/synced:.0f}_tok_per_s")
+    emit("decode_device_accumulate", fused,
+         f"{toks/fused:.0f}_tok_per_s_speedup={synced/fused:.2f}x")
+
 
 if __name__ == "__main__":
     run()

@@ -12,25 +12,30 @@ from repro.core.allocator import (AllocationPlan, Chunk,
 from repro.core.allocator_baselines import CachingAllocator, GSOCAllocator
 from repro.core.cost_model import (AnalyticCostModel, BucketedCostModel,
                                    CostModel, TableCostModel)
+from repro.core.pipeline import (PipelineBackend, PipelineConfig,
+                                 PipelineStats, ServingPipeline,
+                                 plan_for_policy)
 from repro.core.scheduler import (BatchPlan, brute_force_schedule,
                                   dp_schedule, naive_schedule,
                                   nobatch_schedule)
-from repro.core.serving import (MessageQueue, Request, ResponseCache,
-                                Response, ServingConfig, ServingSystem)
-from repro.core.simulator import (SimConfig, SimResult, Workload,
-                                  critical_point, simulate,
-                                  throughput_curve)
+from repro.core.serving import (Request, ResponseCache, Response,
+                                ServingConfig, ServingSystem)
+from repro.core.simulator import (SimConfig, SimResult, VirtualBackend,
+                                  VirtualClock, Workload, critical_point,
+                                  simulate, throughput_curve)
 from repro.core.usage_records import (dedup_repeated_structure,
                                       records_for_fn, records_from_jaxpr)
 
 __all__ = [
     "AllocationPlan", "AnalyticCostModel", "BatchPlan", "BucketedCostModel",
     "CachingAllocator", "Chunk", "CostModel", "GSOCAllocator",
-    "MessageQueue", "Request", "Response", "ResponseCache",
-    "SequenceAwareAllocator", "ServingConfig", "ServingSystem", "SimConfig",
-    "SimResult", "TableCostModel", "TensorUsageRecord", "Workload",
-    "brute_force_schedule", "critical_point", "dedup_repeated_structure",
-    "dp_schedule", "find_gap_from_chunk", "naive_schedule",
-    "nobatch_schedule", "records_for_fn", "records_from_jaxpr", "simulate",
-    "throughput_curve", "validate_plan",
+    "PipelineBackend", "PipelineConfig", "PipelineStats",
+    "Request", "Response", "ResponseCache", "SequenceAwareAllocator",
+    "ServingConfig", "ServingPipeline", "ServingSystem", "SimConfig",
+    "SimResult", "TableCostModel", "TensorUsageRecord", "VirtualBackend",
+    "VirtualClock", "Workload", "brute_force_schedule", "critical_point",
+    "dedup_repeated_structure", "dp_schedule", "find_gap_from_chunk",
+    "naive_schedule", "nobatch_schedule", "plan_for_policy",
+    "records_for_fn", "records_from_jaxpr", "simulate", "throughput_curve",
+    "validate_plan",
 ]

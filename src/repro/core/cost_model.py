@@ -36,6 +36,24 @@ class CostModel:
     def per_request(self, seq_len: int, batch: int) -> float:
         return self.latency(seq_len, batch) / max(batch, 1)
 
+    # -- two-phase regime (iteration-level scheduling) -------------------
+    # Continuous batching plans *ticks*, not whole requests: a tick is
+    # either a prompt pass over newly admitted requests (prefill) or one
+    # token for every in-flight sequence (decode).  The planner compares
+    # the two so it can decide whether admitting prefills is worth
+    # stalling the decode batch.
+
+    def prefill_latency(self, seq_len: int, batch: int) -> float:
+        """Prompt pass over ``batch`` requests padded to ``seq_len``."""
+        return self.latency(seq_len, batch)
+
+    def decode_latency(self, batch: int, context_len: int = 0) -> float:
+        """One decode tick: a single new token for each of ``batch``
+        sequences whose KV context averages ``context_len`` tokens.
+        Default approximation: a length-1 forward pass (weight-bound);
+        models that see KV traffic should override."""
+        return self.latency(1, batch)
+
 
 @dataclass
 class AnalyticCostModel(CostModel):
@@ -64,6 +82,17 @@ class AnalyticCostModel(CostModel):
             (self.peak_flops * self.chips)
         memory = (self.weight_bytes + self.bytes_per_token * tokens) / \
             (self.hbm_bw * self.chips)
+        return max(compute, memory) + self.overhead
+
+    def decode_latency(self, batch: int, context_len: int = 0) -> float:
+        """Decode ticks are memory-bound: one token of compute per
+        sequence plus the whole weight read plus streaming each
+        sequence's KV context back in."""
+        compute = self.flops_per_token * batch / \
+            (self.peak_flops * self.chips)
+        kv_read = self.bytes_per_token * context_len * batch
+        memory = (self.weight_bytes + self.bytes_per_token * batch +
+                  kv_read) / (self.hbm_bw * self.chips)
         return max(compute, memory) + self.overhead
 
 
@@ -153,3 +182,9 @@ class BucketedCostModel(CostModel):
 
     def latency(self, seq_len: int, batch: int) -> float:
         return self.base.latency(self.bucket_of(seq_len), batch)
+
+    def decode_latency(self, batch: int, context_len: int = 0) -> float:
+        # decode executes a length-1 step regardless of bucketing; only
+        # the KV context the step streams is bucket-padded
+        ctx = self.bucket_of(context_len) if context_len else 0
+        return self.base.decode_latency(batch, ctx)

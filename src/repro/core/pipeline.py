@@ -1,0 +1,273 @@
+"""Iteration-level serving event loop shared by the real engine and the
+discrete-event simulator.
+
+TurboTransformers' original framework (paper §5) batches at *request*
+granularity: plan over the queue, execute every planned batch, repeat.
+This module generalizes that loop to *iteration* granularity (continuous
+batching, cf. the LLM-serving survey's iteration-level scheduling): each
+:meth:`ServingPipeline.tick` either
+
+  1. admits queued sessions as a **prefill** batch (planned by the paper's
+     DP scheduler over the admissible prefix of the queue), or
+  2. advances every in-flight **decode** session by one token.
+
+One-shot (classification) sessions finish at prefill, which makes the
+request-granularity system of the paper a special case of this loop.
+
+The pipeline is execution-agnostic: a :class:`PipelineBackend` runs the
+work.  `repro.runtime.engine.ContinuousEngine` backs it with a live model
+and wall clock; `repro.core.simulator.VirtualBackend` backs it with a cost
+model and a virtual clock.  Both modes therefore run the *identical*
+trigger / planning / bookkeeping code — scheduling behavior validated in
+simulation is the behavior deployed on hardware.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.core.cost_model import CostModel
+from repro.core.scheduler import (BatchPlan, dp_schedule, naive_schedule,
+                                  nobatch_schedule)
+from repro.runtime.session import Session, SessionState
+
+
+def plan_for_policy(policy: str, lengths: Sequence[int], cost: CostModel,
+                    max_batch_size: Optional[int]) -> BatchPlan:
+    if policy == "nobatch":
+        return nobatch_schedule(lengths, cost)
+    if policy == "naive":
+        return naive_schedule(lengths, cost, max_batch_size)
+    if policy == "dp":
+        return dp_schedule(lengths, cost, max_batch_size)
+    raise ValueError(f"unknown policy {policy!r}")
+
+
+class PipelineBackend:
+    """Executes the work the pipeline schedules.
+
+    Implementations mutate the sessions' state machines: ``prefill_batch``
+    must move every session to DECODE (or FINISHED for one-shot work);
+    ``decode_tick`` must append tokens and finish sessions that hit EOS or
+    their budget, releasing their KV immediately.
+    """
+
+    def prefill_batch(self, sessions: List[Session],
+                      padded_len: int) -> None:
+        raise NotImplementedError
+
+    def decode_tick(self, sessions: List[Session]) -> None:
+        raise NotImplementedError
+
+    def free_slots(self) -> Optional[int]:
+        """Decode slots available for new admissions; None = unbounded."""
+        return None
+
+    def validate(self, session: Session) -> None:
+        """Raise ValueError for a session this backend can never serve
+        (checked at submit time, before any state transition)."""
+
+
+@dataclass
+class PipelineConfig:
+    policy: str = "dp"                  # nobatch | naive | dp
+    strategy: str = "hungry"            # hungry | lazy
+    max_batch_size: int = 20
+    lazy_timeout: float = 5e-3          # lazy: flush after this wait
+    slo_latency: Optional[float] = None  # start early if at risk (§5)
+    # iteration-level admission:
+    #   continuous — new prefills may join while decodes are in flight
+    #   drain      — batch-at-a-time: admit only when nothing is in
+    #                flight (the paper's request-granularity baseline)
+    admission: str = "continuous"
+    # two-phase regime: admit a prefill mid-decode only if it stalls the
+    # decode batch by at most this many decode ticks
+    prefill_stall_factor: float = 32.0
+    # always admit while the decode batch is below this size (prefills
+    # are cheap to amortize into an underfull decode batch)
+    min_decode_batch: int = 1
+
+
+@dataclass
+class PipelineStats:
+    prefill_ticks: int = 0
+    decode_ticks: int = 0
+    prefill_batches: int = 0
+    admitted: int = 0
+    deferred_prefills: int = 0          # two-phase regime said "keep decoding"
+
+
+class ServingPipeline:
+    """The shared scheduler loop.  Owns the admission queue and the set of
+    in-flight sessions; delegates execution to a backend."""
+
+    def __init__(self, backend: PipelineBackend, cost: CostModel,
+                 config: Optional[PipelineConfig] = None,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        self.backend = backend
+        self.cost = cost
+        self.config = config if config is not None else PipelineConfig()
+        self.clock = clock
+        self.queue: List[Session] = []          # QUEUED, arrival order
+        self.live: List[Session] = []           # DECODE in flight
+        self.finished: List[Session] = []
+        self.stats = PipelineStats()
+        # req-id composition of every executed prefill batch, in dispatch
+        # order — lets tests assert real-vs-virtual scheduling equivalence
+        self.batch_log: List[Tuple[int, ...]] = []
+
+    # ------------------------------------------------------------------
+    # Admission control
+    # ------------------------------------------------------------------
+    def submit(self, session: Session) -> None:
+        if session.state is not SessionState.QUEUED:
+            raise ValueError(f"session {session.req_id} already "
+                             f"{session.state}")
+        self.backend.validate(session)
+        self.queue.append(session)
+
+    def _decoding(self) -> List[Session]:
+        return [s for s in self.live if s.state is SessionState.DECODE]
+
+    def _trigger(self) -> bool:
+        """Hungry/lazy/SLO flush trigger (paper §5), over the queue."""
+        cfg = self.config
+        if cfg.strategy == "hungry":
+            return True
+        if len(self.queue) >= cfg.max_batch_size:
+            return True
+        oldest = self.queue[0]
+        now = self.clock()
+        if now - oldest.arrival_time >= cfg.lazy_timeout:
+            return True
+        if cfg.slo_latency is not None:
+            est = self.cost.latency(oldest.seq_len, len(self.queue))
+            if (now - oldest.arrival_time) + est > cfg.slo_latency / 2:
+                return True
+        return False
+
+    def _admissible(self) -> List[Session]:
+        """Oldest queued sessions that fit the backend's free capacity."""
+        free = self.backend.free_slots()
+        return self.queue if free is None else self.queue[:free]
+
+    def _prefill_worthwhile(self, cand: List[Session]) -> bool:
+        """Two-phase cost regime: is admitting these prefills worth
+        stalling the in-flight decode batch?"""
+        decoding = self._decoding()
+        if not decoding or len(decoding) < self.config.min_decode_batch:
+            return True
+        k = min(len(cand), self.config.max_batch_size)
+        stall = self.cost.prefill_latency(
+            max(s.seq_len for s in cand[:k]), k)
+        ctx = sum(s.seq_len + s.tokens_emitted for s in decoding) \
+            / len(decoding)
+        tick = self.cost.decode_latency(len(decoding), int(ctx))
+        return stall <= self.config.prefill_stall_factor * tick
+
+    def should_admit(self, record: bool = False) -> bool:
+        """Pure query unless ``record`` (tick-internal): only real
+        scheduling decisions count a deferral in the stats."""
+        if not self.queue:
+            return False
+        if self.config.admission == "drain" and self.live:
+            return False
+        cand = self._admissible()
+        if not cand:
+            return False
+        if not self._trigger():
+            return False
+        if not self._prefill_worthwhile(cand):
+            if record:
+                self.stats.deferred_prefills += 1
+            return False
+        return True
+
+    # ------------------------------------------------------------------
+    # The loop
+    # ------------------------------------------------------------------
+    def tick(self) -> List[Session]:
+        """One scheduler iteration: a prefill admission round OR one
+        decode step over every in-flight sequence.  Returns the sessions
+        that finished during this tick."""
+        done: List[Session] = []
+        if self.should_admit(record=True):
+            cand = self._admissible()
+            plan = plan_for_policy(self.config.policy,
+                                   [s.seq_len for s in cand], self.cost,
+                                   self.config.max_batch_size)
+            batches = plan.batches
+            # with decodes in flight, dispatch ONE batch per tick: the
+            # two-phase veto bounded the stall of a single prefill pass,
+            # and the rest of the queue re-plans next tick, interleaved
+            # with decode progress (idle pipelines run the whole plan —
+            # the paper's batch-at-a-time behavior)
+            if self._decoding():
+                batches = batches[:1]
+            admitted = set()
+            for batch_idx in batches:
+                batch = [cand[i] for i in batch_idx]
+                padded = max(s.seq_len for s in batch)
+                now = self.clock()
+                for s in batch:
+                    s.start_prefill(now, batch_size=len(batch),
+                                    padded_len=padded)
+                try:
+                    self.backend.prefill_batch(batch, padded)
+                except Exception as exc:
+                    # fail this batch terminally and flush the tick's
+                    # bookkeeping so neither the failed batch nor the
+                    # already-admitted earlier batches wedge the queue
+                    for s in batch:
+                        if not s.is_finished:
+                            s.error = str(exc)
+                            s.finish(self.clock())
+                    admitted.update(id(s) for s in batch)
+                    done.extend(batch)
+                    self.queue = [s for s in self.queue
+                                  if id(s) not in admitted]
+                    self.finished.extend(done)
+                    raise
+                self.batch_log.append(tuple(s.req_id for s in batch))
+                self.stats.prefill_batches += 1
+                for s in batch:
+                    admitted.add(id(s))
+                    if s.is_finished:
+                        done.append(s)
+                    elif s.state is SessionState.DECODE:
+                        self.live.append(s)
+                    else:
+                        raise RuntimeError(
+                            f"backend left session {s.req_id} in "
+                            f"{s.state} after prefill")
+            self.queue = [s for s in self.queue if id(s) not in admitted]
+            self.stats.prefill_ticks += 1
+            self.stats.admitted += len(admitted)
+        elif self._decoding():
+            self.backend.decode_tick(self._decoding())
+            self.stats.decode_ticks += 1
+        # unified sweep: collect everything that finished this tick —
+        # decode completions AND sessions an out-of-band backend sync
+        # (e.g. sync_every > 1) marked finished during a prefill tick
+        done.extend(s for s in self.live if s.is_finished)
+        self.live = [s for s in self.live if not s.is_finished]
+        self.finished.extend(done)
+        return done
+
+    def idle(self) -> bool:
+        return not self.queue and not self.live
+
+    def drain(self) -> List[Session]:
+        """Tick until nothing is queued or in flight.  Breaks instead of
+        spinning when a hungry pipeline can make no further progress
+        (e.g. capacity-starved with nothing decoding)."""
+        out: List[Session] = []
+        while not self.idle():
+            finished = self.tick()
+            out.extend(finished)
+            if not finished and not self._decoding() \
+                    and self.config.strategy == "hungry" \
+                    and not self.should_admit():
+                break
+        return out

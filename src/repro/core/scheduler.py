@@ -33,6 +33,9 @@ class BatchPlan:
 
 def _plan_cost(lengths: Sequence[int], batches: Sequence[Sequence[int]],
                cost: CostModel) -> float:
+    """Single metric shared by ALL policies (and the DP recurrence): the
+    summed full-batch latency.  Every ``BatchPlan.total_cost`` is therefore
+    directly comparable across nobatch / naive / dp in benchmarks."""
     total = 0.0
     for batch in batches:
         max_len = max(lengths[i] for i in batch)
@@ -57,10 +60,14 @@ def dp_schedule(lengths: Sequence[int], cost: CostModel,
         cur_len = slen[i - 1]
         best = INF
         best_j = i - 1
-        # batch = sorted requests [j .. i-1], size i-j, padded to cur_len
+        # batch = sorted requests [j .. i-1], size i-j, padded to cur_len.
+        # The paper writes the term as cached_cost[len][bs] * bs (per-
+        # request cost times size); we charge cost.latency(len, bs)
+        # directly — the same quantity, and the same metric _plan_cost
+        # charges the baselines — so total_cost is policy-comparable.
         for j in range(i - 1, max(i - 1 - max_b, -1), -1):
             bs = i - j
-            c = states[j] + cost.per_request(cur_len, bs) * bs
+            c = states[j] + cost.latency(cur_len, bs)
             if c < best:
                 best = c
                 best_j = j

@@ -1,23 +1,33 @@
-"""Serving framework (paper §5): message queue, response cache, batch
+"""Serving framework (paper §5): admission queue, response cache, batch
 scheduler triggering (hungry/lazy), SLO guard.
 
-The framework is runtime-agnostic: it drives any ``execute(batch) ->
-results`` callable — the real TPU/CPU engine in production
-(`repro.runtime.engine`) or a virtual-clock executor in the simulator
-(`repro.core.simulator`).
+Since the iteration-level refactor, :class:`ServingSystem` is a thin
+wall-clock front-end over the shared scheduler loop in
+`repro.core.pipeline` — the same loop the virtual-clock simulator drives.
+Two execution styles are supported:
+
+- one-shot (classification): construct with ``execute(batch, padded_len)
+  -> results``, exactly as before; requests finish at prefill;
+- generative continuous batching: construct with ``backend=`` an engine
+  backend (e.g. `repro.runtime.engine.ContinuousEngine`) and submit
+  sessions with a ``max_new_tokens`` budget; new arrivals join the next
+  decode tick without waiting for in-flight generations to drain.
 """
 from __future__ import annotations
 
 import collections
 import hashlib
 import time
-from dataclasses import dataclass, field
-from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
-                    Tuple)
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional, Sequence
 
 from repro.core.cost_model import CostModel
-from repro.core.scheduler import (BatchPlan, dp_schedule, naive_schedule,
-                                  nobatch_schedule)
+from repro.core.pipeline import (PipelineBackend, PipelineConfig,
+                                 ServingPipeline, plan_for_policy)
+from repro.runtime.session import Session, SessionState
+
+__all__ = ["Request", "Response", "ResponseCache", "ServingConfig",
+           "ServingSystem", "plan_for_policy"]
 
 
 @dataclass
@@ -47,25 +57,6 @@ class Response:
         return self.finish_time - self.arrival_time
 
 
-class MessageQueue:
-    def __init__(self) -> None:
-        self._q: Deque[Request] = collections.deque()
-
-    def push(self, req: Request) -> None:
-        self._q.append(req)
-
-    def pop_all(self) -> List[Request]:
-        out = list(self._q)
-        self._q.clear()
-        return out
-
-    def peek_oldest(self) -> Optional[Request]:
-        return self._q[0] if self._q else None
-
-    def __len__(self) -> int:
-        return len(self._q)
-
-
 class ResponseCache:
     """Clipper-style result memoization for frequent identical requests."""
 
@@ -91,102 +82,109 @@ class ResponseCache:
             self._store.popitem(last=False)
 
 
-def plan_for_policy(policy: str, lengths: Sequence[int], cost: CostModel,
-                    max_batch_size: Optional[int]) -> BatchPlan:
-    if policy == "nobatch":
-        return nobatch_schedule(lengths, cost)
-    if policy == "naive":
-        return naive_schedule(lengths, cost, max_batch_size)
-    if policy == "dp":
-        return dp_schedule(lengths, cost, max_batch_size)
-    raise ValueError(f"unknown policy {policy!r}")
-
-
 @dataclass
-class ServingConfig:
-    policy: str = "dp"                  # nobatch | naive | dp
-    strategy: str = "hungry"            # hungry | lazy
-    max_batch_size: int = 20
-    lazy_timeout: float = 5e-3          # lazy: flush after this wait
-    slo_latency: Optional[float] = None  # start early if at risk (§5)
+class ServingConfig(PipelineConfig):
     enable_cache: bool = False
+    cache_capacity: int = 4096          # ResponseCache size
+
+
+class CallableBackend(PipelineBackend):
+    """One-shot execution through the classic ``execute(requests,
+    padded_len) -> results`` callable.  Sessions finish at prefill; there
+    is no decode phase and capacity is unbounded."""
+
+    def __init__(self, execute: Callable[[List[Request], int], List[Any]],
+                 clock: Callable[[], float]) -> None:
+        self.execute = execute
+        self.clock = clock
+
+    def prefill_batch(self, sessions: List[Session],
+                      padded_len: int) -> None:
+        reqs = [Request(s.req_id, s.seq_len, s.arrival_time, s.payload)
+                for s in sessions]
+        results = self.execute(reqs, padded_len)
+        now = self.clock()
+        for s, res in zip(sessions, results):
+            s.finish(now, result=res)
+
+    def decode_tick(self, sessions: List[Session]) -> None:
+        raise RuntimeError("one-shot backend has no decode phase")
 
 
 class ServingSystem:
     """Real-time serving loop over a live engine.
 
-    ``execute(requests, padded_len) -> list[result]`` runs one batch.
-    ``clock()`` returns the current time (wall clock by default; the
-    simulator swaps in a virtual clock).
+    ``clock()`` returns the current time (wall clock by default; tests and
+    the simulator swap in virtual clocks).
     """
 
-    def __init__(self, execute: Callable[[List[Request], int], List[Any]],
-                 cost_model: CostModel,
-                 config: ServingConfig = ServingConfig(),
-                 clock: Callable[[], float] = time.monotonic) -> None:
-        self.execute = execute
-        self.cost = cost_model
-        self.config = config
+    def __init__(self,
+                 execute: Optional[
+                     Callable[[List[Request], int], List[Any]]] = None,
+                 cost_model: Optional[CostModel] = None,
+                 config: Optional[ServingConfig] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 backend: Optional[PipelineBackend] = None) -> None:
+        if (execute is None) == (backend is None):
+            raise ValueError("pass exactly one of execute= or backend=")
+        if cost_model is None:
+            raise ValueError("cost_model is required (admission planning "
+                             "and the two-phase regime depend on it)")
+        self.config = config if config is not None else ServingConfig()
         self.clock = clock
-        self.mq = MessageQueue()
-        self.cache = ResponseCache()
+        if backend is None:
+            backend = CallableBackend(execute, clock)
+        self.backend = backend
+        self.pipeline = ServingPipeline(backend, cost_model, self.config,
+                                        clock)
+        self.cache = ResponseCache(self.config.cache_capacity)
         self.responses: List[Response] = []
 
-    def submit(self, req: Request) -> Optional[Response]:
-        if self.config.enable_cache:
-            cached = self.cache.get(req.cache_key())
-            if cached is not None:
-                resp = Response(req.req_id, req.arrival_time, self.clock(),
-                                1, req.seq_len, cached, cached=True)
-                self.responses.append(resp)
-                return resp
-        self.mq.push(req)
-        return None
+    # -- compatibility helpers ----------------------------------------
+    @property
+    def cost(self) -> CostModel:
+        return self.pipeline.cost
 
     def should_flush(self) -> bool:
-        """Lazy-strategy trigger (§5): batch full, timeout, or SLO risk."""
-        if len(self.mq) == 0:
-            return False
-        if self.config.strategy == "hungry":
-            return True
-        if len(self.mq) >= self.config.max_batch_size:
-            return True
-        oldest = self.mq.peek_oldest()
-        now = self.clock()
-        if now - oldest.arrival_time >= self.config.lazy_timeout:
-            return True
-        if self.config.slo_latency is not None:
-            est = self.cost.latency(oldest.seq_len, len(self.mq))
-            if (now - oldest.arrival_time) + est > \
-                    self.config.slo_latency / 2:
-                return True
-        return False
+        return self.pipeline.should_admit()
 
-    def step(self) -> List[Response]:
-        """Plan over the queue and execute the planned batches."""
-        if not self.should_flush():
-            return []
-        reqs = self.mq.pop_all()
-        lengths = [r.seq_len for r in reqs]
-        plan = plan_for_policy(self.config.policy, lengths, self.cost,
-                               self.config.max_batch_size)
-        out: List[Response] = []
-        for batch_idx in plan.batches:
-            batch = [reqs[i] for i in batch_idx]
-            padded = max(r.seq_len for r in batch)
-            results = self.execute(batch, padded)
-            now = self.clock()
-            for r, res in zip(batch, results):
-                resp = Response(r.req_id, r.arrival_time, now, len(batch),
-                                padded, res)
-                out.append(resp)
-                if self.config.enable_cache:
-                    self.cache.put(r.cache_key(), res)
+    def _as_session(self, req) -> Session:
+        if isinstance(req, Session):
+            return req
+        return Session.from_request(req)
+
+    def submit(self, req) -> Optional[Response]:
+        """Accepts a Request (one-shot) or a Session (generative)."""
+        session = self._as_session(req)
+        if self.config.enable_cache:
+            cached = self.cache.get(session.cache_key())
+            if cached is not None:
+                resp = Response(session.req_id, session.arrival_time,
+                                self.clock(), 1, session.seq_len, cached,
+                                cached=True)
+                self.responses.append(resp)
+                return resp
+        self.pipeline.submit(session)
+        return None
+
+    def _collect(self, finished: Sequence[Session]) -> List[Response]:
+        out = []
+        for s in finished:
+            result = s.result
+            if result is None and s.generated:
+                result = list(s.prompt or []) + list(s.generated)
+            resp = Response(s.req_id, s.arrival_time, s.finish_time,
+                            s.batch_size, s.padded_len, result)
+            out.append(resp)
+            if self.config.enable_cache:
+                self.cache.put(s.cache_key(), result)
         self.responses.extend(out)
         return out
 
+    def step(self) -> List[Response]:
+        """One scheduler tick: a prefill admission round (the whole plan)
+        or one decode step over the in-flight batch."""
+        return self._collect(self.pipeline.tick())
+
     def drain(self) -> List[Response]:
-        out = []
-        while len(self.mq):
-            out.extend(self.step())
-        return out
+        return self._collect(self.pipeline.drain())

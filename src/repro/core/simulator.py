@@ -1,25 +1,35 @@
 """Discrete-event serving simulator (paper §6.3: Figs. 15/16, Tables 4/5).
 
 Requests arrive with Poisson inter-arrival times and uniform random
-lengths; a single-GPU (here: single-accelerator) server executes batches
-back-to-back, with service time given by a CostModel. Policies: nobatch /
-naive / dp — exactly the four systems in the paper once combined with the
-PyTorch-vs-Turbo cost models.
+lengths; replicas execute work with service times given by a CostModel.
+Policies: nobatch / naive / dp — exactly the four systems in the paper
+once combined with the PyTorch-vs-Turbo cost models.
 
-Beyond-paper scale features exercised here: straggler injection +
-timeout-requeue mitigation, and multi-replica serving with a shared queue
-(the Nexus-style upper-level balancer the paper defers to).
+Since the iteration-level refactor the simulator carries NO plan/execute
+logic of its own: each replica is a `repro.core.pipeline.ServingPipeline`
+— the same loop `ServingSystem` runs on hardware — driven by a
+:class:`VirtualBackend` that advances a virtual clock by cost-model
+estimates instead of running a model.  Generative workloads
+(``Workload.gen_tokens > 0``) exercise the continuous-batching decode
+phase, including early release of KV the moment a sequence hits its
+(synthetic) EOS.
+
+Beyond-paper scale features: straggler injection + timeout-requeue
+mitigation, and multi-replica serving with a shared arrival stream (the
+Nexus-style upper-level balancer the paper defers to).
 """
 from __future__ import annotations
 
-import heapq
 import math
 import random
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cost_model import CostModel
-from repro.core.serving import Request, Response, plan_for_policy
+from repro.core.pipeline import (PipelineBackend, PipelineConfig,
+                                 PipelineStats, ServingPipeline)
+from repro.core.serving import Request, Response
+from repro.runtime.session import Session
 
 
 @dataclass
@@ -29,20 +39,34 @@ class Workload:
     len_min: int = 2
     len_max: int = 100
     seed: int = 0
+    # generation: 0 = one-shot classification (paper's workload);
+    # > 0 = each request decodes up to gen_tokens new tokens, hitting a
+    # synthetic EOS uniformly in [gen_min, gen_tokens] when gen_min is set
+    gen_tokens: int = 0
+    gen_min: Optional[int] = None
 
-    def generate(self) -> List[Request]:
+    def generate_sessions(self) -> List[Session]:
         rng = random.Random(self.seed)
         t = 0.0
-        out = []
+        out: List[Session] = []
         i = 0
         while True:
             t += rng.expovariate(self.rate)
             if t > self.duration:
                 break
-            out.append(Request(i, rng.randint(self.len_min, self.len_max),
-                               t))
+            s = Session(req_id=i,
+                        seq_len=rng.randint(self.len_min, self.len_max),
+                        arrival_time=t,
+                        max_new_tokens=self.gen_tokens)
+            if self.gen_tokens and self.gen_min is not None:
+                s.eos_at = rng.randint(self.gen_min, self.gen_tokens)
+            out.append(s)
             i += 1
         return out
+
+    def generate(self) -> List[Request]:
+        return [Request(s.req_id, s.seq_len, s.arrival_time)
+                for s in self.generate_sessions()]
 
 
 @dataclass
@@ -50,14 +74,133 @@ class SimConfig:
     policy: str = "dp"
     max_batch_size: int = 20
     num_replicas: int = 1
-    # straggler model: with prob p a batch takes x`slowdown`; if mitigation
-    # is on, a straggling batch is cut off at `timeout_factor` x expected
-    # and re-executed (requeue), modelling replica failover.
+    # iteration-level knobs (see PipelineConfig): "continuous" admits
+    # prefills mid-decode; "drain" reproduces batch-at-a-time serving
+    admission: str = "continuous"
+    max_decode_slots: Optional[int] = None
+    prefill_stall_factor: float = 32.0
+    min_decode_batch: int = 1
+    # KV accounting: "eos" frees a sequence's region the moment it
+    # finishes; "batch" holds every region until its whole prefill group
+    # drains (the pre-refactor engine behavior, kept as a baseline)
+    kv_free: str = "eos"
+    # straggler model: with prob p a service takes x`slowdown`; if
+    # mitigation is on, a straggling service is cut off at
+    # `timeout_factor` x expected and re-executed (requeue), modelling
+    # replica failover.
     straggler_prob: float = 0.0
     straggler_slowdown: float = 5.0
     mitigate_stragglers: bool = False
     straggler_timeout_factor: float = 2.0
     seed: int = 0
+
+    def pipeline_config(self) -> PipelineConfig:
+        return PipelineConfig(
+            policy=self.policy, strategy="hungry",
+            max_batch_size=self.max_batch_size, admission=self.admission,
+            prefill_stall_factor=self.prefill_stall_factor,
+            min_decode_batch=self.min_decode_batch)
+
+
+class VirtualClock:
+    def __init__(self, now: float = 0.0) -> None:
+        self.now = now
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> None:
+        self.now += dt
+
+
+class VirtualBackend(PipelineBackend):
+    """Cost-model execution: every pipeline action advances the replica's
+    virtual clock by the modelled service time.  Shared KV accounting (in
+    tokens) lets benchmarks compare footprint under eos-early-free vs
+    hold-to-batch-end."""
+
+    def __init__(self, cost: CostModel, clock: VirtualClock,
+                 service: Callable[[float], float],
+                 config: SimConfig,
+                 kv_live: Dict[int, int],
+                 kv_timeline: List[Tuple[float, int]]) -> None:
+        self.cost = cost
+        self.clock = clock
+        self.service = service
+        self.config = config
+        self.decoding: List[Session] = []
+        self.kv_live = kv_live              # req_id -> held tokens
+        self.kv_timeline = kv_timeline      # (virtual time, live tokens)
+        self._groups: List[Dict[int, Session]] = []   # kv_free="batch"
+
+    # -- capacity ------------------------------------------------------
+    def free_slots(self) -> Optional[int]:
+        if self.config.max_decode_slots is None:
+            return None
+        return self.config.max_decode_slots - len(self.decoding)
+
+    # -- KV accounting ---------------------------------------------------
+    def _sample_kv(self) -> None:
+        self.kv_timeline.append((self.clock.now,
+                                 sum(self.kv_live.values())))
+
+    def _on_finish(self, s: Session) -> None:
+        if self.config.kv_free == "eos":
+            self.kv_live.pop(s.req_id, None)
+
+    def _sweep_groups(self) -> None:
+        """Hold-to-batch-end accounting: release a prefill group's regions
+        only once every member has finished."""
+        kept = []
+        for group in self._groups:
+            if all(m.is_finished for m in group.values()):
+                for rid in group:
+                    self.kv_live.pop(rid, None)
+            else:
+                kept.append(group)
+        self._groups = kept
+
+    # -- execution -------------------------------------------------------
+    def prefill_batch(self, sessions: List[Session],
+                      padded_len: int) -> None:
+        b = len(sessions)
+        self.clock.advance(
+            self.service(self.cost.prefill_latency(padded_len, b)))
+        now = self.clock.now
+        for s in sessions:
+            if s.is_one_shot:
+                s.finish(now)
+                continue
+            self.kv_live[s.req_id] = s.total_len
+            s.start_decode(now)
+            s.generated.append(1)        # first token comes from prefill
+            if s.stop_after(1):
+                s.finish(now)
+                self._on_finish(s)
+            else:
+                self.decoding.append(s)
+        if self.config.kv_free == "batch":
+            group = {s.req_id: s for s in sessions if not s.is_one_shot}
+            if group:
+                self._groups.append(group)
+            self._sweep_groups()
+        self._sample_kv()
+
+    def decode_tick(self, sessions: List[Session]) -> None:
+        b = len(sessions)
+        ctx = sum(s.seq_len + s.tokens_emitted for s in sessions) / b
+        self.clock.advance(
+            self.service(self.cost.decode_latency(b, int(ctx))))
+        now = self.clock.now
+        for s in sessions:
+            s.generated.append(1)
+            if s.stop_after(s.tokens_emitted):
+                s.finish(now)
+                self._on_finish(s)
+        self.decoding = [s for s in self.decoding if not s.is_finished]
+        if self.config.kv_free == "batch":
+            self._sweep_groups()
+        self._sample_kv()
 
 
 @dataclass
@@ -65,6 +208,11 @@ class SimResult:
     responses: List[Response]
     duration: float
     offered: int                     # arrivals within the window
+    # iteration-level telemetry (kv_timeline: single-replica runs only —
+    # samples from independent replica clocks would not be comparable)
+    kv_timeline: List[Tuple[float, int]] = field(default_factory=list)
+    batch_log: List[Tuple[int, ...]] = field(default_factory=list)
+    stats: PipelineStats = field(default_factory=PipelineStats)
 
     @property
     def throughput(self) -> float:
@@ -86,23 +234,27 @@ class SimResult:
         lats = [r.latency for r in self.responses]
         return (sum(lats) / len(lats), min(lats), max(lats))
 
+    @property
+    def peak_kv_tokens(self) -> int:
+        return max((v for _, v in self.kv_timeline), default=0)
+
+    @property
+    def mean_kv_tokens(self) -> float:
+        if not self.kv_timeline:
+            return 0.0
+        return sum(v for _, v in self.kv_timeline) / len(self.kv_timeline)
+
 
 def simulate(workload: Workload, cost: CostModel,
-             config: SimConfig = SimConfig()) -> SimResult:
-    """Hungry-strategy serving: whenever a replica is idle and the queue is
-    non-empty, plan over the current queue and execute the plan's batches."""
-    arrivals = workload.generate()
+             config: Optional[SimConfig] = None) -> SimResult:
+    """Drive the shared ServingPipeline loop under a virtual clock:
+    whenever a replica is the earliest free, it admits arrivals up to its
+    clock and ticks (a planned prefill round or one decode step)."""
+    config = config if config is not None else SimConfig()
+    sessions = workload.generate_sessions()
     rng = random.Random(config.seed + 1)
-    queue: List[Request] = []
-    responses: List[Response] = []
-    # replica free times
-    free_at = [0.0] * config.num_replicas
-    ai = 0
-    n = len(arrivals)
-    horizon = workload.duration * 3 + 1.0
 
-    def service_time(batch_len: int, padded: int) -> float:
-        base = cost.latency(padded, batch_len)
+    def service(base: float) -> float:
         if config.straggler_prob and rng.random() < config.straggler_prob:
             slow = base * config.straggler_slowdown
             if config.mitigate_stragglers:
@@ -111,49 +263,70 @@ def simulate(workload: Workload, cost: CostModel,
             return slow
         return base
 
-    while True:
-        r = min(range(config.num_replicas), key=lambda i: free_at[i])
-        now = free_at[r]
-        # admit arrivals up to `now`
-        while ai < n and arrivals[ai].arrival_time <= now:
-            queue.append(arrivals[ai])
-            ai += 1
-        if not queue:
-            if ai >= n:
-                break
-            # idle until next arrival
-            free_at[r] = max(now, arrivals[ai].arrival_time)
-            continue
-        if now > horizon:
-            break   # saturated — latency is effectively +inf
-        lengths = [q.seq_len for q in queue]
-        plan = plan_for_policy(config.policy, lengths, cost,
-                               config.max_batch_size)
-        reqs = list(queue)
-        queue.clear()
-        t = now
-        for batch_idx in plan.batches:
-            batch = [reqs[i] for i in batch_idx]
-            padded = max(b.seq_len for b in batch)
-            t += service_time(len(batch), padded)
-            for b in batch:
-                responses.append(Response(b.req_id, b.arrival_time, t,
-                                          len(batch), padded))
-        free_at[r] = t
+    # KV accounting is per replica (each replica's cache is its own
+    # device memory); the sampled timeline is only coherent against a
+    # single clock, so it is recorded for single-replica runs only.
+    kv_timeline: List[Tuple[float, int]] = []
+    clocks = [VirtualClock() for _ in range(config.num_replicas)]
+    pcfg = config.pipeline_config()
+    pipelines = []
+    for clock in clocks:
+        backend = VirtualBackend(
+            cost, clock, service, config, {},
+            kv_timeline if config.num_replicas == 1 else [])
+        pipelines.append(ServingPipeline(backend, cost, pcfg, clock))
 
-    return SimResult(responses, workload.duration, n)
+    ai = 0
+    n = len(sessions)
+    horizon = workload.duration * 3 + 1.0
+
+    while True:
+        r = min(range(config.num_replicas), key=lambda i: clocks[i].now)
+        now = clocks[r].now
+        if not math.isfinite(now) or now > horizon:
+            break   # saturated or fully drained
+        while ai < n and sessions[ai].arrival_time <= now:
+            pipelines[r].submit(sessions[ai])
+            ai += 1
+        if pipelines[r].idle():
+            if ai < n:
+                # idle until the next arrival
+                clocks[r].now = max(now, sessions[ai].arrival_time)
+            else:
+                clocks[r].now = math.inf   # retired: no work will come
+            continue
+        pipelines[r].tick()
+
+    responses = []
+    stats = PipelineStats()
+    batch_log: List[Tuple[int, ...]] = []
+    for p in pipelines:
+        for s in p.finished:
+            responses.append(Response(s.req_id, s.arrival_time,
+                                      s.finish_time, s.batch_size,
+                                      s.padded_len))
+        batch_log.extend(p.batch_log)
+        for k in vars(stats):
+            setattr(stats, k, getattr(stats, k) + getattr(p.stats, k))
+    responses.sort(key=lambda r: (r.finish_time, r.req_id))
+    return SimResult(responses, workload.duration, n,
+                     kv_timeline=sorted(kv_timeline), batch_log=batch_log,
+                     stats=stats)
 
 
 def throughput_curve(rates: Sequence[float], cost: CostModel,
                      config: SimConfig, duration: float = 20.0,
                      len_min: int = 2, len_max: int = 100,
-                     seed: int = 0) -> List[Dict[str, float]]:
+                     seed: int = 0, gen_tokens: int = 0,
+                     gen_min: Optional[int] = None
+                     ) -> List[Dict[str, float]]:
     """Offered-load sweep -> (resp/sec, latency stats, stable?) per rate.
     The 'critical point' (paper Fig. 15) is the largest stable rate."""
     out = []
     for rate in rates:
         wl = Workload(rate=rate, duration=duration, len_min=len_min,
-                      len_max=len_max, seed=seed)
+                      len_max=len_max, seed=seed, gen_tokens=gen_tokens,
+                      gen_min=gen_min)
         res = simulate(wl, cost, config)
         avg, lo, hi = res.latency_stats()
         out.append({

@@ -1,8 +1,8 @@
 """Serving driver: the full TurboTransformers pipeline over a real engine.
 
-Request stream (Poisson arrivals, uniform lengths) -> MessageQueue ->
-batch scheduler (nobatch | naive | dp) -> InferenceEngine (bucketed,
-compiled-cell cache) -> responses. The cached_cost table is built by the
+Request stream (Poisson arrivals, uniform lengths) -> iteration-level
+serving pipeline -> batch scheduler (nobatch | naive | dp) ->
+InferenceEngine (bucketed, compiled-cell cache) -> responses. The cached_cost table is built by the
 engine's warm-up phase (paper §5).
 
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \

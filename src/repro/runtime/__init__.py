@@ -1,7 +1,36 @@
-from repro.runtime.bucketing import BucketLadder
-from repro.runtime.engine import InferenceEngine
-from repro.runtime.kv_cache import (KVSlabManager, kv_bytes_per_token,
-                                    ssm_state_bytes)
+"""Runtime package.
 
-__all__ = ["BucketLadder", "InferenceEngine", "KVSlabManager",
+Attribute access is lazy (PEP 562): `repro.core.pipeline` imports the
+dependency-free `repro.runtime.session` at import time, and eagerly
+importing the engine here would close a cycle back through `repro.core`.
+"""
+from repro.runtime.session import Session, SessionState
+
+__all__ = ["BucketLadder", "ContinuousEngine", "InferenceEngine",
+           "KVSlabManager", "Session", "SessionState",
            "kv_bytes_per_token", "ssm_state_bytes"]
+
+_LAZY = {
+    "BucketLadder": ("repro.runtime.bucketing", "BucketLadder"),
+    "ContinuousEngine": ("repro.runtime.engine", "ContinuousEngine"),
+    "InferenceEngine": ("repro.runtime.engine", "InferenceEngine"),
+    "KVSlabManager": ("repro.runtime.kv_cache", "KVSlabManager"),
+    "kv_bytes_per_token": ("repro.runtime.kv_cache", "kv_bytes_per_token"),
+    "ssm_state_bytes": ("repro.runtime.kv_cache", "ssm_state_bytes"),
+}
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+    value = getattr(importlib.import_module(mod_name), attr)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(__all__)

@@ -4,23 +4,36 @@ Responsibilities (paper §4 mapped to TPU/XLA):
  - variable-length requests -> (seq bucket, batch bucket) cells with one
    compiled executable per cell (compile cache, warmed up front);
  - per-request last-token gathering so padding never contaminates results;
- - prefill + decode generation with functional caches (donated buffers);
- - KV slab accounting via :class:`KVSlabManager` (C2 at serving time);
+ - resumable generation primitives — :meth:`InferenceEngine.prefill_batch`
+   / :meth:`InferenceEngine.decode_step_batch` — whose state lives on
+   device between scheduler ticks (no per-token host round-trips: emitted
+   tokens accumulate in a device buffer and transfer once per flush);
+ - KV slab accounting via :class:`KVSlabManager` (C2 at serving time),
+   with regions freed the moment a sequence hits EOS or its budget;
  - ``warmup()`` produces the cached_cost table the DP scheduler (C3) uses.
+
+:class:`ContinuousEngine` layers iteration-level continuous batching on
+top: a persistent slot cache that newly admitted prefills join while other
+sequences are mid-decode.  It implements the
+`repro.core.pipeline.PipelineBackend` protocol, so the shared
+ServingPipeline loop drives it exactly as it drives the simulator's
+virtual backend.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, replace
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.core.cost_model import TableCostModel
+from repro.core.pipeline import PipelineBackend
 from repro.core.serving import Request
 from repro.models import (ModelRuntime, DEFAULT_RUNTIME, decode_step,
                           forward_hidden, make_cache, prefill)
@@ -28,6 +41,40 @@ from repro.models.layers import lm_logits
 from repro.runtime.bucketing import BucketLadder
 from repro.runtime.kv_cache import (KVSlabManager, kv_bytes_per_token,
                                     ssm_state_bytes)
+from repro.runtime.session import Session
+
+# cache pytree leaves whose batch axis is 0 (everything else batches on
+# axis 1: k/v/conv/state are (L, B, ...), shared_k/v are (n_apps, B, ...))
+_BATCH_AXIS0 = ("len", "pos_offset")
+
+
+@dataclass
+class GenState:
+    """Device-resident state of an in-flight generation batch.
+
+    Everything needed to advance decoding one token per tick without
+    touching the host: the KV cache, the last sampled token per row, the
+    emitted-token accumulation buffer, and per-row stop bookkeeping.
+    """
+    cache: Dict[str, jax.Array]
+    cur: jax.Array                    # (B,) or (B,K) last sampled token
+    emitted: jax.Array                # (B, cap) generated tokens
+    counts: jax.Array                 # (B,) number emitted
+    done: jax.Array                   # (B,) bool
+    budget: jax.Array                 # (B,) per-row max_new_tokens
+    eos: jax.Array                    # (B,) eos id or -1
+
+    @property
+    def capacity(self) -> int:
+        """Per-row emission capacity (the cap in the (B, cap) buffer)."""
+        return self.emitted.shape[1]
+
+
+def _rows(value: jax.Array, key: Optional[str], k: int) -> jax.Array:
+    """First ``k`` batch rows of a state leaf."""
+    if key is None or key not in _BATCH_AXIS0:
+        return value[:, :k] if key is not None else value[:k]
+    return value[:k]
 
 
 class InferenceEngine:
@@ -43,7 +90,7 @@ class InferenceEngine:
         self.kv_slab = KVSlabManager()
         self._classify_cache: Dict[Tuple[int, int], Callable] = {}
         self._prefill_cache: Dict[Tuple[int, int, int], Callable] = {}
-        self._decode_cache: Dict[Tuple[int, int], Callable] = {}
+        self._decode_cache: Dict[Any, Callable] = {}
         self.compile_count = 0
         self._next_gen_id = 0
 
@@ -69,7 +116,8 @@ class InferenceEngine:
         return self._classify_cache[key]
 
     def _decode_fn(self) -> Callable:
-        key = (0, 0)
+        """Plain one-step decode (legacy host-synced loop)."""
+        key = "step"
         if key not in self._decode_cache:
             cfg, rt = self.cfg, self.rt
 
@@ -80,6 +128,57 @@ class InferenceEngine:
             self._decode_cache[key] = step
             self.compile_count += 1
         return self._decode_cache[key]
+
+    def _tick_fn(self, tok_ndim: int) -> Callable:
+        """Fused decode tick: one decode step + greedy sample + device-
+        side emission + stop-flag update.  No host transfer anywhere —
+        the whole generation loop runs on device until a flush."""
+        key = ("tick", tok_ndim)
+        if key not in self._decode_cache:
+            cfg, rt = self.cfg, self.rt
+
+            @partial(jax.jit, donate_argnums=(1, 2, 3, 4, 5))
+            def tick(params, cache, cur, emitted, counts, done, budget,
+                     eos):
+                prev_len = cache["len"]
+                logits, cache2 = decode_step(cfg, params, cache, cur,
+                                             rt=rt)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                tok = nxt if nxt.ndim == 1 else nxt[:, 0]
+                # finished rows are frozen: no KV advance, no emission
+                cache2["len"] = jnp.where(done, prev_len, cache2["len"])
+                written = jax.vmap(
+                    lambda e, t, c: lax.dynamic_update_slice(
+                        e, t[None], (c,)))(emitted, tok, counts)
+                emitted2 = jnp.where(done[:, None], emitted, written)
+                counts2 = jnp.where(done, counts, counts + 1)
+                done2 = done | (counts2 >= budget) | (tok == eos)
+                mask = done if cur.ndim == 1 else done[:, None]
+                cur2 = jnp.where(mask, cur, nxt)
+                return cache2, cur2, emitted2, counts2, done2
+
+            self._decode_cache[key] = tick
+            self.compile_count += 1
+        return self._decode_cache[key]
+
+    def _prefill_fn(self, max_len: int, batch_b: int,
+                    prompt_b: int) -> Callable:
+        key = (max_len, batch_b, prompt_b)
+        if key not in self._prefill_cache:
+            cfg, rt = self.cfg, self.rt
+
+            @jax.jit
+            def pf(params, tokens, true_lengths):
+                return prefill(
+                    cfg, params, tokens, max_len=max_len, rt=rt,
+                    true_lengths=(true_lengths if (cfg.family not in
+                                                   ("ssm", "hybrid"))
+                                  else None),
+                    cache_dtype=jnp.float32)
+
+            self._prefill_cache[key] = pf
+            self.compile_count += 1
+        return self._prefill_cache[key]
 
     # ------------------------------------------------------------------
     # Batch padding
@@ -113,13 +212,24 @@ class InferenceEngine:
         """ServingSystem adapter: requests carry token payloads."""
         return self.classify([r.payload for r in requests])
 
-    def generate(self, token_lists: Sequence[Sequence[int]],
-                 max_new_tokens: int = 16) -> List[List[int]]:
-        """Greedy decode over a ragged batch (right-padded; per-request
-        last-token gather). KV regions tracked in the slab manager.
-        SSM/hybrid families require equal prompt lengths (state would roll
-        through padding otherwise)."""
+    # ------------------------------------------------------------------
+    # Resumable generation primitives
+    # ------------------------------------------------------------------
+    def prefill_batch(self, token_lists: Sequence[Sequence[int]], *,
+                      max_len: int,
+                      max_new_tokens,
+                      eos_id=None,
+                      cap_new: Optional[int] = None) -> GenState:
+        """Prompt pass producing a device-resident :class:`GenState` that
+        :meth:`decode_step_batch` advances one token per call.
+
+        ``max_new_tokens`` / ``eos_id`` may be scalars or per-request
+        sequences.  The KV cache is sized to ``max_len`` so states built
+        against the same ``max_len`` are row-compatible (the continuous
+        engine splices them into its slot cache).
+        """
         cfg = self.cfg
+        n = len(token_lists)
         lens = [len(t) for t in token_lists]
         ragged = len(set(lens)) > 1
         if ragged and cfg.family in ("ssm", "hybrid"):
@@ -128,48 +238,112 @@ class InferenceEngine:
             prompt_b = max(lens)   # no pad: state would roll through it
         else:
             prompt_b = self.ladder.seq_bucket(max(lens))
-        seq_b = self.ladder.seq_bucket(max(lens) + max_new_tokens)
-        batch_b = self.ladder.batch_bucket(len(token_lists))
+        batch_b = self.ladder.batch_bucket(n)
+        budgets = list(max_new_tokens) if hasattr(max_new_tokens, "__len__") \
+            else [int(max_new_tokens)] * n
+        eos_ids = list(eos_id) if hasattr(eos_id, "__len__") \
+            else [eos_id] * n
+        if max(lens[i] + budgets[i] for i in range(n)) > max_len:
+            raise ValueError(f"prompt+budget exceeds max_len {max_len}")
+        cap = cap_new if cap_new is not None else max(max(budgets), 1)
+        if cap < max(budgets):
+            raise ValueError(f"cap_new={cap} cannot hold a "
+                             f"max_new_tokens={max(budgets)} budget")
+
         toks = np.full((batch_b, prompt_b), self.pad_id, np.int32)
         for i, t in enumerate(token_lists):
             toks[i, :len(t)] = t
-        true_lens = np.array(lens + [1] * (batch_b - len(lens)), np.int32)
+        true_lens = np.array(lens + [1] * (batch_b - n), np.int32)
+        logits, cache = self._prefill_fn(max_len, batch_b, prompt_b)(
+            self.params, jnp.asarray(toks), jnp.asarray(true_lens))
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tok0 = cur if cur.ndim == 1 else cur[:, 0]
+
+        budget = jnp.asarray(np.array(
+            budgets + [0] * (batch_b - n), np.int32))
+        eos = jnp.asarray(np.array(
+            [(-1 if e is None else e) for e in eos_ids] +
+            [-1] * (batch_b - n), np.int32))
+        emitted = jnp.zeros((batch_b, cap), jnp.int32)
+        emitted = emitted.at[:, 0].set(tok0)
+        counts = jnp.minimum(jnp.ones((batch_b,), jnp.int32), budget)
+        done = (counts >= budget) | ((tok0 == eos) & (counts > 0))
+        return GenState(cache, cur, emitted, counts, done, budget, eos)
+
+    def decode_step_batch(self, state: GenState) -> GenState:
+        """One decode tick for every live row of ``state`` — entirely on
+        device; finished rows are frozen."""
+        tick = self._tick_fn(state.cur.ndim)
+        cache, cur, emitted, counts, done = tick(
+            self.params, state.cache, state.cur, state.emitted,
+            state.counts, state.done, state.budget, state.eos)
+        return replace(state, cache=cache, cur=cur, emitted=emitted,
+                       counts=counts, done=done)
+
+    def read_out(self, state: GenState,
+                 token_lists: Sequence[Sequence[int]]) -> List[List[int]]:
+        """ONE host transfer for the whole batch: prompt + emitted."""
+        em = np.asarray(state.emitted)
+        cnt = np.asarray(state.counts)
+        return [list(t) + [int(x) for x in em[i, :cnt[i]]]
+                for i, t in enumerate(token_lists)]
+
+    def generate(self, token_lists: Sequence[Sequence[int]],
+                 max_new_tokens: int = 16, eos_id: Optional[int] = None,
+                 per_token_host_sync: bool = False) -> List[List[int]]:
+        """Greedy decode over a ragged batch (right-padded; per-request
+        last-token gather). KV regions tracked in the slab manager.
+
+        The decode loop accumulates tokens on device and transfers once
+        at the end; ``per_token_host_sync=True`` keeps the old
+        round-trip-per-token loop as a benchmark baseline."""
+        cfg = self.cfg
+        lens = [len(t) for t in token_lists]
+        seq_b = self.ladder.seq_bucket(max(lens) + max_new_tokens)
         per_tok = kv_bytes_per_token(cfg)
         fixed = ssm_state_bytes(cfg)
-        req_ids = [self._next_gen_id + i for i in range(len(token_lists))]
+        # negative ids: a namespace disjoint from serving req_ids, so a
+        # generate() call never collides with ContinuousEngine regions
+        # living in the same slab manager
+        req_ids = [-(self._next_gen_id + i + 1)
+                   for i in range(len(token_lists))]
         self._next_gen_id += len(token_lists)
-        for rid in req_ids:
+        for rid, l in zip(req_ids, lens):
             self.kv_slab.allocate(
-                rid, per_tok * seq_b + fixed if per_tok else max(fixed, 1))
+                rid, per_tok * seq_b + fixed if per_tok else max(fixed, 1),
+                tokens=l + max_new_tokens)
+        try:
+            if max_new_tokens == 0:
+                return [list(t) for t in token_lists]
+            if per_token_host_sync:
+                return self._generate_host_synced(token_lists,
+                                                  max_new_tokens, seq_b)
+            state = self.prefill_batch(token_lists, max_len=seq_b,
+                                       max_new_tokens=max_new_tokens,
+                                       eos_id=eos_id)
+            for _ in range(max_new_tokens - 1):
+                state = self.decode_step_batch(state)
+            return self.read_out(state, token_lists)
+        finally:
+            for rid in req_ids:
+                self.kv_slab.free(rid)
+            self.kv_slab.gc()
 
-        key = (seq_b, batch_b, prompt_b)
-        if key not in self._prefill_cache:
-            rt = self.rt
-
-            @jax.jit
-            def pf(params, tokens, true_lengths):
-                return prefill(
-                    cfg, params, tokens, max_len=seq_b, rt=rt,
-                    true_lengths=(true_lengths if (cfg.family not in
-                                                   ("ssm", "hybrid"))
-                                  else None),
-                    cache_dtype=jnp.float32)
-            self._prefill_cache[key] = pf
-            self.compile_count += 1
-        logits, cache = self._prefill_cache[key](
-            self.params, jnp.asarray(toks), jnp.asarray(true_lens))
+    def _generate_host_synced(self, token_lists, max_new_tokens, seq_b):
+        """Pre-refactor decode loop: np.asarray(cur) every iteration (a
+        device->host sync per token).  Kept only so benchmarks can show
+        the cost it used to impose."""
+        state = self.prefill_batch(token_lists, max_len=seq_b,
+                                   max_new_tokens=max_new_tokens)
         step = self._decode_fn()
         outs = [list(t) for t in token_lists]
-        cur = jnp.argmax(logits, axis=-1)
+        cache, cur = state.cache, state.cur
         for _ in range(max_new_tokens):
             cur_np = np.asarray(cur)
             for i in range(len(token_lists)):
                 outs[i].append(int(cur_np[i].reshape(-1)[0]))
             cur_logits, cache = step(self.params, cache, cur)
             cur = jnp.argmax(cur_logits, axis=-1)
-        for rid in req_ids:
-            self.kv_slab.free(rid)
-        self.kv_slab.gc()
         return outs
 
     # ------------------------------------------------------------------
@@ -190,3 +364,195 @@ class InferenceEngine:
             return (time.perf_counter() - t0) / repeats
 
         return TableCostModel.warmup(measure, lengths, batches)
+
+
+class ContinuousEngine(PipelineBackend):
+    """Iteration-level continuous batching over a persistent slot cache.
+
+    ``max_slots`` sequences decode concurrently in one fused device step;
+    newly admitted prefills are spliced into free slots *between* decode
+    ticks, so arrivals join the next tick without waiting for in-flight
+    generations to drain.  A sequence's KV region is freed the moment it
+    hits EOS or its token budget — footprint tracks the live token set,
+    not the batch horizon.
+
+    Attention-family models only: SSM state could be spliced the same
+    way, but ragged prefill is unsupported for SSM so admission would be
+    restricted to equal-length groups (see ROADMAP open items).
+    """
+
+    def __init__(self, engine: InferenceEngine, max_slots: int = 8,
+                 max_len: Optional[int] = None, cap_new: int = 64,
+                 sync_every: int = 1,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        cfg = engine.cfg
+        if cfg.family in ("ssm", "hybrid") or cfg.num_codebooks:
+            raise ValueError("ContinuousEngine supports attention-family "
+                             "token models only")
+        self.engine = engine
+        self.max_slots = max_slots
+        self.max_len = max_len      # fixed at first prefill when None
+        self.cap_new = cap_new
+        self.sync_every = sync_every
+        self.clock = clock
+        self.sessions: List[Optional[Session]] = [None] * max_slots
+        self.state: Optional[GenState] = None
+        self._since_sync = 0
+        self.decode_ticks = 0
+
+    # -- PipelineBackend -------------------------------------------------
+    def free_slots(self) -> int:
+        return sum(1 for s in self.sessions if s is None)
+
+    def validate(self, session: Session) -> None:
+        """Reject un-servable sessions at submit time, before the
+        pipeline transitions them out of QUEUED."""
+        if session.prompt is None:
+            raise ValueError(f"session {session.req_id} has no prompt "
+                             "tokens")
+        if session.max_new_tokens > self.cap_new:
+            raise ValueError(
+                f"session {session.req_id}: max_new_tokens="
+                f"{session.max_new_tokens} exceeds cap_new={self.cap_new}")
+        if self.engine.kv_slab.has_region(session.req_id):
+            raise ValueError(f"session {session.req_id}: req_id already "
+                             "in flight")
+        # once the slot cache exists it can grow up to the top ladder
+        # bucket; a constructor-fixed max_len with no state yet is the
+        # one hard ceiling below that
+        if self.state is None and self.max_len is not None:
+            ceiling = self.max_len
+        else:
+            ceiling = self.engine.ladder.seq_buckets[-1]
+        if session.total_len > ceiling:
+            raise ValueError(
+                f"session {session.req_id}: prompt+budget="
+                f"{session.total_len} exceeds max_len {ceiling}")
+
+    def prefill_batch(self, sessions: List[Session],
+                      padded_len: int) -> None:
+        eng = self.engine
+        # everything that can fail is checked BEFORE any device-state or
+        # slab mutation — a partial prefill must not poison the slot cache
+        over = [s.req_id for s in sessions
+                if s.max_new_tokens > self.cap_new]
+        if over:
+            raise ValueError(
+                f"sessions {over} exceed the emission buffer "
+                f"(max_new_tokens > cap_new={self.cap_new}); raise "
+                f"cap_new or lower the budget")
+        dup = [s.req_id for s in sessions
+               if eng.kv_slab.has_region(s.req_id)]
+        if dup:
+            raise ValueError(f"req_ids {dup} already hold KV regions "
+                             "(duplicate in-flight submission?)")
+        need = eng.ladder.seq_bucket(max(s.total_len for s in sessions))
+        self._ensure_state(need)
+        token_lists = [list(s.prompt) for s in sessions]
+        budgets = [s.max_new_tokens for s in sessions]
+        eos_ids = [s.eos_id for s in sessions]
+        rows = eng.prefill_batch(token_lists, max_len=self.max_len,
+                                 max_new_tokens=budgets, eos_id=eos_ids,
+                                 cap_new=self.cap_new)
+        slots = [i for i, s in enumerate(self.sessions) if s is None]
+        slots = slots[:len(sessions)]
+        assert len(slots) == len(sessions), "admitted beyond free slots"
+        self._splice(rows, slots)
+        now = self.clock()
+        per_tok = kv_bytes_per_token(eng.cfg)
+        for slot, s in zip(slots, sessions):
+            self.sessions[slot] = s
+            eng.kv_slab.allocate(s.req_id, max(per_tok * s.total_len, 1),
+                                 tokens=s.total_len)
+            s.start_decode(now, slot=slot)
+        # a budget-1 or instant-EOS prompt may be done already
+        self._sync()
+
+    def decode_tick(self, sessions: List[Session]) -> None:
+        self.state = self.engine.decode_step_batch(self.state)
+        self.decode_ticks += 1
+        self._since_sync += 1
+        if self._since_sync >= self.sync_every:
+            self._sync()
+
+    # -- internals -------------------------------------------------------
+    def _ensure_state(self, need_len: int) -> None:
+        eng = self.engine
+        if self.state is None:
+            if self.max_len is None:
+                self.max_len = need_len
+            if need_len > self.max_len:
+                raise ValueError(f"prompt+budget needs {need_len} > "
+                                 f"slot cache max_len {self.max_len}")
+            B = self.max_slots
+            cache = make_cache(eng.cfg, B, self.max_len, jnp.float32)
+            self.state = GenState(
+                cache=cache,
+                cur=jnp.zeros((B,), jnp.int32),
+                emitted=jnp.zeros((B, self.cap_new), jnp.int32),
+                counts=jnp.zeros((B,), jnp.int32),
+                done=jnp.ones((B,), bool),
+                budget=jnp.zeros((B,), jnp.int32),
+                eos=jnp.full((B,), -1, jnp.int32))
+            return
+        if need_len > self.max_len:
+            grow = need_len - self.max_len
+            cache = dict(self.state.cache)
+            for k in ("k", "v"):
+                pad = [(0, 0)] * cache[k].ndim
+                pad[2] = (0, grow)          # (L, B, S, kv, dh) seq axis
+                cache[k] = jnp.pad(cache[k], pad)
+            self.state = replace(self.state, cache=cache)
+            self.max_len = need_len
+
+    def _splice(self, rows: GenState, slots: List[int]) -> None:
+        """Insert the first ``len(slots)`` rows of a freshly prefilled
+        GenState into the persistent slot cache."""
+        st = self.state
+        k = len(slots)
+        idx = jnp.asarray(np.array(slots, np.int32))
+        cache = {}
+        for key, leaf in st.cache.items():
+            src = _rows(rows.cache[key], key, k)
+            if key in _BATCH_AXIS0:
+                cache[key] = leaf.at[idx].set(src)
+            else:
+                cache[key] = leaf.at[:, idx].set(src)
+        self.state = GenState(
+            cache=cache,
+            cur=st.cur.at[idx].set(_rows(rows.cur, None, k)),
+            emitted=st.emitted.at[idx].set(_rows(rows.emitted, None, k)),
+            counts=st.counts.at[idx].set(_rows(rows.counts, None, k)),
+            done=st.done.at[idx].set(_rows(rows.done, None, k)),
+            budget=st.budget.at[idx].set(_rows(rows.budget, None, k)),
+            eos=st.eos.at[idx].set(_rows(rows.eos, None, k)))
+
+    def _sync(self) -> None:
+        """Flush: read the (tiny) stop flags; only when an occupied slot
+        newly finished is the token buffer transferred — the hot decode
+        loop moves no per-token data to the host."""
+        self._since_sync = 0
+        st = self.state
+        done = np.asarray(st.done)
+        if not any(done[slot] for slot, s in enumerate(self.sessions)
+                   if s is not None):
+            return
+        counts = np.asarray(st.counts)
+        emitted = np.asarray(st.emitted)
+        now = self.clock()
+        freed = False
+        for slot, s in enumerate(self.sessions):
+            if s is None or not done[slot]:
+                continue
+            s.generated = [int(x) for x in emitted[slot, :counts[slot]]]
+            s.result = list(s.prompt or []) + s.generated
+            s.finish(now)
+            self.engine.kv_slab.free(s.req_id)
+            self.sessions[slot] = None
+            freed = True
+        if freed:
+            self.engine.kv_slab.gc()
+
+    @property
+    def live_tokens(self) -> int:
+        return self.engine.kv_slab.live_tokens

@@ -51,6 +51,7 @@ class Region:
     chunk_id: int
     offset: int
     size: int
+    tokens: int = 0                   # KV tokens this region backs
 
 
 @dataclass
@@ -92,13 +93,13 @@ class KVSlabManager:
         self.allocated_bytes = 0
         self.freed_bytes = 0
 
-    def allocate(self, req_id: int, size: int) -> Region:
+    def allocate(self, req_id: int, size: int, tokens: int = 0) -> Region:
         if req_id in self._regions:
             raise KeyError(f"request {req_id} already has a region")
         for slab in self.slabs.values():
             off = slab.best_gap(size)
             if off is not None:
-                region = Region(req_id, slab.chunk_id, off, size)
+                region = Region(req_id, slab.chunk_id, off, size, tokens)
                 slab.live.append(region)
                 self._regions[req_id] = region
                 return region
@@ -107,10 +108,13 @@ class KVSlabManager:
         self._next_id += 1
         self.slabs[slab.chunk_id] = slab
         self.allocated_bytes += cap
-        region = Region(req_id, slab.chunk_id, 0, size)
+        region = Region(req_id, slab.chunk_id, 0, size, tokens)
         slab.live.append(region)
         self._regions[req_id] = region
         return region
+
+    def has_region(self, req_id: int) -> bool:
+        return req_id in self._regions
 
     def free(self, req_id: int) -> None:
         region = self._regions.pop(req_id)
@@ -139,3 +143,10 @@ class KVSlabManager:
     @property
     def live_bytes(self) -> int:
         return sum(r.size for r in self._regions.values())
+
+    @property
+    def live_tokens(self) -> int:
+        """Tokens of KV state currently held — under iteration-level
+        serving this tracks the *live* sequence set, dropping the moment
+        a request hits EOS (paper Figs. 11/12, in KV form)."""
+        return sum(r.tokens for r in self._regions.values())

@@ -1,0 +1,167 @@
+"""Request-lifecycle state machine for iteration-level serving.
+
+A :class:`Session` is one request's journey through the continuous-batching
+pipeline: ``QUEUED -> PREFILL -> DECODE -> FINISHED`` for generative
+requests, or ``QUEUED -> PREFILL -> FINISHED`` for one-shot (classification)
+requests that complete in a single batched forward pass.
+
+Sessions are the currency shared by the scheduler loop
+(`repro.core.pipeline`), the real engine (`repro.runtime.engine`) and the
+virtual-clock simulator (`repro.core.simulator`): all three move the same
+objects through the same transitions, so scheduling decisions are testable
+against either execution mode.
+
+This module is deliberately dependency-free (no jax, no repro.core) so both
+packages can import it without cycles.
+"""
+from __future__ import annotations
+
+import enum
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Sequence
+
+
+class SessionState(enum.Enum):
+    QUEUED = "queued"        # waiting in the admission queue
+    PREFILL = "prefill"      # prompt pass dispatched this tick
+    DECODE = "decode"        # holds a KV slot; advances one token per tick
+    FINISHED = "finished"    # response ready, KV freed
+
+    def __str__(self) -> str:  # nicer asserts/logs
+        return self.value
+
+
+_VALID = {
+    SessionState.QUEUED: (SessionState.PREFILL,),
+    SessionState.PREFILL: (SessionState.DECODE, SessionState.FINISHED),
+    SessionState.DECODE: (SessionState.FINISHED,),
+    SessionState.FINISHED: (),
+}
+
+
+class InvalidTransition(RuntimeError):
+    pass
+
+
+@dataclass
+class Session:
+    """One request moving through the serving pipeline.
+
+    ``seq_len`` is the declared prompt length (used for planning even when
+    ``prompt`` tokens are absent, e.g. in the simulator);
+    ``max_new_tokens == 0`` marks a one-shot request that finishes at
+    prefill (the paper's BERT classification service).
+    """
+    req_id: int
+    seq_len: int
+    arrival_time: float
+    prompt: Optional[Sequence[int]] = None
+    max_new_tokens: int = 0
+    eos_id: Optional[int] = None
+    payload: Any = None               # raw request payload (one-shot input)
+
+    state: SessionState = SessionState.QUEUED
+    generated: List[int] = field(default_factory=list)
+    result: Any = None
+    error: Optional[str] = None       # set when execution failed terminally
+
+    # execution bookkeeping (filled in as the session advances)
+    slot: int = -1                    # decode-slot index in the engine
+    batch_size: int = 0               # size of the batch it was prefilled in
+    padded_len: int = 0               # padded length of that batch
+    prefill_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    # simulator hook: synthetic EOS position (tokens emitted before stop);
+    # None means the token budget is the only stop condition.
+    eos_at: Optional[int] = None
+
+    # -- constructors ----------------------------------------------------
+    @classmethod
+    def from_request(cls, req: "Any", max_new_tokens: int = 0,
+                     eos_id: Optional[int] = None) -> "Session":
+        """Adapt a `repro.core.serving.Request` (or anything with req_id /
+        seq_len / arrival_time / payload)."""
+        payload = getattr(req, "payload", None)
+        prompt = payload if isinstance(payload, (list, tuple)) else None
+        return cls(req_id=req.req_id, seq_len=req.seq_len,
+                   arrival_time=req.arrival_time, prompt=prompt,
+                   max_new_tokens=max_new_tokens, eos_id=eos_id,
+                   payload=payload)
+
+    def cache_key(self) -> str:
+        """Memoization key: the full request identity — payload for
+        one-shot requests, (prompt, budget, eos) for generative ones,
+        which have no payload and would otherwise all collide."""
+        ident = (self.payload,
+                 tuple(self.prompt) if self.prompt is not None else None,
+                 self.max_new_tokens, self.eos_id)
+        h = hashlib.sha1(repr(ident).encode()).hexdigest()
+        return f"{self.seq_len}:{h}"
+
+    # -- state machine ---------------------------------------------------
+    def _to(self, new: SessionState) -> None:
+        if new not in _VALID[self.state]:
+            raise InvalidTransition(
+                f"session {self.req_id}: {self.state} -> {new}")
+        self.state = new
+
+    def start_prefill(self, now: float, batch_size: int,
+                      padded_len: int) -> None:
+        self._to(SessionState.PREFILL)
+        self.prefill_time = now
+        self.batch_size = batch_size
+        self.padded_len = padded_len
+
+    def start_decode(self, now: float, slot: int = -1) -> None:
+        self._to(SessionState.DECODE)
+        self.slot = slot
+        self.first_token_time = now
+
+    def finish(self, now: float, result: Any = None) -> None:
+        self._to(SessionState.FINISHED)
+        self.finish_time = now
+        if result is not None:
+            self.result = result
+        self.slot = -1
+
+    # -- queries ---------------------------------------------------------
+    @property
+    def is_one_shot(self) -> bool:
+        return self.max_new_tokens == 0
+
+    @property
+    def is_finished(self) -> bool:
+        return self.state == SessionState.FINISHED
+
+    @property
+    def tokens_emitted(self) -> int:
+        return len(self.generated)
+
+    @property
+    def budget_left(self) -> int:
+        return max(self.max_new_tokens - len(self.generated), 0)
+
+    @property
+    def total_len(self) -> int:
+        """Prompt + full generation budget: the KV reach this session may
+        need, used to size slab regions and decode-slot caches."""
+        return self.seq_len + self.max_new_tokens
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+    def stop_after(self, n_emitted: int, token: Optional[int] = None) -> bool:
+        """Would the session stop after having emitted ``n_emitted`` tokens,
+        the last of which is ``token``? (budget, synthetic EOS position, or
+        a real EOS id)."""
+        if n_emitted >= self.max_new_tokens:
+            return True
+        if self.eos_at is not None and n_emitted >= self.eos_at:
+            return True
+        return token is not None and self.eos_id is not None \
+            and token == self.eos_id

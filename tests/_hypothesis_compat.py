@@ -1,0 +1,30 @@
+"""Optional-hypothesis shim: property tests skip cleanly when the
+`hypothesis` dev dependency is absent (it is pinned in
+requirements-dev.txt but not baked into every runtime image), while the
+plain unit tests in the same modules keep running."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                    # pragma: no cover - optional dep
+    HAVE_HYPOTHESIS = False
+
+    def _skip_decorator(*_a, **_k):
+        def wrap(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed")(fn)
+        return wrap
+
+    given = settings = _skip_decorator
+
+    class _Strategies:
+        """Accepts any strategy construction; values are never used
+        because the decorated test is skipped."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

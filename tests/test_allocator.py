@@ -1,7 +1,8 @@
 """Allocator (paper Algorithm 1) unit + hypothesis property tests."""
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (CachingAllocator, GSOCAllocator,
                         SequenceAwareAllocator, TensorUsageRecord,

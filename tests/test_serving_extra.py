@@ -3,7 +3,8 @@ data pipeline determinism, cost-model properties."""
 import time
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (AnalyticCostModel, BucketedCostModel, Request,
                         ServingConfig, ServingSystem)
