@@ -11,10 +11,23 @@ Two workloads: lengths U(2,100) (Fig 15 / Table 4) and U(5,500)
 Service times come from calibrated analytic cost models (RTX2060-class);
 the shapes of the curves and the ORDERING of critical points are the
 reproduced claims.
+
+Beyond-paper sections: continuous-vs-drain admission, KV footprint under
+eos-early-free, and a REAL-engine comparison of the paged block-table KV
+cache against the contiguous slot cache (throughput + footprint).
+
+Every run writes a machine-readable trajectory to ``BENCH_serving.json``
+(cwd).  ``--smoke`` / ``BENCH_SMOKE=1`` shrinks durations so CI can keep
+the file schema valid on every push; the paper-claim assertions only run
+at full scale.
 """
 from __future__ import annotations
 
+import json
 import math
+import os
+import sys
+import time
 
 from benchmarks.common import emit
 from repro.core import (AnalyticCostModel, SimConfig, Workload, simulate,
@@ -36,11 +49,13 @@ SYSTEMS = [
     ("turbo-dp-batch", TURBO_CM, "dp"),
 ]
 
+OUT_PATH = "BENCH_serving.json"
 
-def curve(name, cm, policy, len_min, len_max, rates):
+
+def curve(name, cm, policy, len_min, len_max, rates, duration):
     rows = throughput_curve(rates, cm, SimConfig(policy=policy,
                                                  max_batch_size=20),
-                            duration=25.0, len_min=len_min,
+                            duration=duration, len_min=len_min,
                             len_max=len_max, seed=0)
     crit = 0.0
     for r in rows:
@@ -49,8 +64,8 @@ def curve(name, cm, policy, len_min, len_max, rates):
     return rows, crit
 
 
-def table_at(cm, policy, rate, len_min, len_max):
-    wl = Workload(rate=rate, duration=25.0, len_min=len_min,
+def table_at(cm, policy, rate, len_min, len_max, duration):
+    wl = Workload(rate=rate, duration=duration, len_min=len_min,
                   len_max=len_max, seed=0)
     res = simulate(wl, cm, SimConfig(policy=policy, max_batch_size=20))
     avg, lo, hi = res.latency_stats()
@@ -59,38 +74,116 @@ def table_at(cm, policy, rate, len_min, len_max):
     return f"avg={avg*1e3:.1f}ms(min={lo*1e3:.1f},max={hi*1e3:.1f})"
 
 
-def run() -> None:
+def bench_real_engine(payload: dict) -> None:
+    """Real ContinuousEngine, paged vs contiguous KV on one workload:
+    identical generations, throughput, and the footprint trajectory the
+    block tables buy (held blocks vs the contiguous slot-cache horizon)."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+    from repro.runtime import BucketLadder, InferenceEngine
+    from repro.runtime.engine import ContinuousEngine
+    from repro.runtime.session import Session
+    from repro.core import ServingConfig, ServingSystem
+
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.key(0))
+    eng = InferenceEngine(cfg, params, ladder=BucketLadder(
+        seq_buckets=(32, 64), batch_buckets=(1, 2, 4)))
+    cm = AnalyticCostModel(flops_per_token=1e6, bytes_per_token=1e3,
+                           weight_bytes=1e6, overhead=1e-4)
+    specs = [([1, 2, 3], 12), ([4, 5, 6, 7, 8, 9], 8),
+             ([2] * 14, 14), ([9, 8, 7], 4), ([5] * 30, 10),
+             ([3, 1, 4, 1, 5], 6)]
+
+    results = {}
+    outputs = {}
+    for layout in ("contiguous", "paged"):
+        ce = ContinuousEngine(eng, max_slots=4, cap_new=16,
+                              kv_layout=layout)
+        sys_ = ServingSystem(backend=ce, cost_model=cm,
+                             config=ServingConfig(policy="dp",
+                                                  max_batch_size=4))
+        sessions = [Session(i, len(p), 0.0, prompt=list(p),
+                            max_new_tokens=m)
+                    for i, (p, m) in enumerate(specs)]
+        for s in sessions:
+            sys_.submit(s)
+        footprint = []
+        t0 = time.perf_counter()
+        while not sys_.pipeline.idle():
+            sys_.step()
+            footprint.append(ce.kv_footprint_tokens)
+        elapsed = time.perf_counter() - t0
+        new_tokens = sum(len(s.generated) for s in sessions)
+        outputs[layout] = [s.result for s in sessions]
+        if layout == "paged":
+            capacity = ce.block_table.capacity_tokens
+        else:
+            capacity = ce.max_slots * (ce.max_len or 0)
+        results[layout] = {
+            "elapsed_s": elapsed,
+            "requests_per_s": len(sessions) / elapsed,
+            "new_tokens_per_s": new_tokens / elapsed,
+            "cache_capacity_tokens": capacity,
+            "peak_footprint_tokens": max(footprint),
+            "mean_footprint_tokens": sum(footprint) / len(footprint),
+        }
+        emit(f"real_engine_{layout}", elapsed,
+             f"peak_kv={max(footprint)}tok_"
+             f"cap={capacity}tok_{new_tokens}newtok")
+    assert outputs["paged"] == outputs["contiguous"], \
+        "paged and contiguous layouts must generate identical tokens"
+    results["token_for_token_equal"] = True
+    payload["real_engine"] = results
+
+
+def run(smoke: bool = False) -> dict:
+    payload = {
+        "schema": "bench_serving/v1",
+        "mode": "smoke" if smoke else "full",
+        "throughput": {},
+        "kv_footprint": {},
+    }
+    dur = 4.0 if smoke else 25.0
+
     # ---- Fig 15: lengths 2-100 ----
-    rates = [20, 50, 99, 150, 237, 323, 402, 500, 700]
+    rates = [20, 99, 237, 500] if smoke else \
+        [20, 50, 99, 150, 237, 323, 402, 500, 700]
     crits = {}
     for name, cm, policy in SYSTEMS:
-        rows, crit = curve(name, cm, policy, 2, 100, rates)
+        rows, crit = curve(name, cm, policy, 2, 100, rates, dur)
         crits[name] = crit
         emit(f"fig15_{name}_critical_point", 0.0,
              f"{crit:.0f}_resp_per_sec")
-    assert crits["turbo-dp-batch"] >= crits["turbo-naive-batch"] >= \
-        crits["turbo-nobatch"] >= crits["pytorch-nobatch"]
+    payload["throughput"]["fig15_critical_points"] = dict(crits)
+    if not smoke:
+        assert crits["turbo-dp-batch"] >= crits["turbo-naive-batch"] >= \
+            crits["turbo-nobatch"] >= crits["pytorch-nobatch"]
     emit("fig15_dp_vs_pytorch", 0.0,
          f"{crits['turbo-dp-batch']/max(crits['pytorch-nobatch'],1):.2f}x")
 
     # ---- Table 4: latency at the four systems' critical points ----
     for rate in (99, 237, 323):
         line = " | ".join(
-            f"{name}:{table_at(cm, policy, rate, 2, 100)}"
+            f"{name}:{table_at(cm, policy, rate, 2, 100, dur)}"
             for name, cm, policy in SYSTEMS)
         emit(f"table4_rate{rate}", 0.0, line.replace(",", ";"))
 
     # ---- Fig 16: lengths 5-500 (naive batching collapses) ----
-    rates = [20, 40, 60, 98, 120, 144, 200, 300]
+    rates = [20, 60, 120, 300] if smoke else \
+        [20, 40, 60, 98, 120, 144, 200, 300]
     crits = {}
     for name, cm, policy in SYSTEMS:
-        rows, crit = curve(name, cm, policy, 5, 500, rates)
+        rows, crit = curve(name, cm, policy, 5, 500, rates, dur)
         crits[name] = crit
         emit(f"fig16_{name}_critical_point", 0.0,
              f"{crit:.0f}_resp_per_sec")
-    assert crits["turbo-naive-batch"] <= crits["turbo-nobatch"], \
-        "naive batching must lose under high length variance"
-    assert crits["turbo-dp-batch"] >= crits["turbo-nobatch"]
+    payload["throughput"]["fig16_critical_points"] = dict(crits)
+    if not smoke:
+        assert crits["turbo-naive-batch"] <= crits["turbo-nobatch"], \
+            "naive batching must lose under high length variance"
+        assert crits["turbo-dp-batch"] >= crits["turbo-nobatch"]
     emit("fig16_naive_collapse", 0.0,
          f"naive={crits['turbo-naive-batch']:.0f}<="
          f"nobatch={crits['turbo-nobatch']:.0f}<="
@@ -99,7 +192,7 @@ def run() -> None:
     # ---- Table 5 ----
     for rate in (60, 98, 120):
         line = " | ".join(
-            f"{name}:{table_at(cm, policy, rate, 5, 500)}"
+            f"{name}:{table_at(cm, policy, rate, 5, 500, dur)}"
             for name, cm, policy in SYSTEMS)
         emit(f"table5_rate{rate}", 0.0, line.replace(",", ";"))
 
@@ -107,14 +200,20 @@ def run() -> None:
     # Same Poisson generative workload (prompts U(2,100), up to 24 new
     # tokens, synthetic EOS >= 4): iteration-level admission vs draining
     # every generation before admitting the next batch.
-    gen_wl = dict(duration=25.0, len_min=2, len_max=100, seed=0,
+    gen_wl = dict(duration=dur, len_min=2, len_max=100, seed=0,
                   gen_tokens=24, gen_min=4)
+    contbatch = {}
     for rate in (20, 40, 80):
         wl = Workload(rate=rate, **gen_wl)
         cont = simulate(wl, TURBO_CM, SimConfig(
             policy="dp", max_batch_size=20, admission="continuous"))
         drain = simulate(wl, TURBO_CM, SimConfig(
             policy="dp", max_batch_size=20, admission="drain"))
+        contbatch[rate] = {"continuous": cont.throughput,
+                           "drain": drain.throughput,
+                           "continuous_avg_latency":
+                               cont.latency_stats()[0],
+                           "drain_avg_latency": drain.latency_stats()[0]}
         emit(f"contbatch_rate{rate}_throughput", 0.0,
              f"continuous={cont.throughput:.1f}_"
              f"drain={drain.throughput:.1f}_resp_per_sec")
@@ -124,6 +223,7 @@ def run() -> None:
         emit(f"contbatch_rate{rate}_avg_latency", 0.0,
              f"continuous={cont.latency_stats()[0]*1e3:.1f}ms_"
              f"drain={drain.latency_stats()[0]*1e3:.1f}ms")
+    payload["throughput"]["continuous_vs_drain"] = contbatch
     # KV footprint: the same continuous schedule under eos-early-free vs
     # hold-to-batch-end accounting — footprint tracks LIVE tokens
     wl = Workload(rate=40, **gen_wl)
@@ -139,9 +239,30 @@ def run() -> None:
          f"eos_free_peak={eos.peak_kv_tokens}_"
          f"mean={eos.mean_kv_tokens:.0f}_vs_batch_end_"
          f"peak={hold.peak_kv_tokens}_mean={hold.mean_kv_tokens:.0f}")
+    payload["kv_footprint"]["sim_eos_free"] = {
+        "peak_tokens": eos.peak_kv_tokens,
+        "mean_tokens": eos.mean_kv_tokens}
+    payload["kv_footprint"]["sim_hold_to_batch_end"] = {
+        "peak_tokens": hold.peak_kv_tokens,
+        "mean_tokens": hold.mean_kv_tokens}
+    # paged accounting of the same schedule: block-rounded charges plus a
+    # bounded pool the admission veto must respect
+    paged = simulate(wl, TURBO_CM, SimConfig(
+        policy="dp", max_batch_size=20, admission="continuous",
+        kv_block_size=16, num_kv_blocks=64))
+    assert paged.peak_kv_tokens <= 64 * 16
+    emit("contbatch_paged_pool", 0.0,
+         f"peak={paged.peak_kv_tokens}_of_{64*16}_pool_tokens")
+    payload["kv_footprint"]["sim_paged_pool"] = {
+        "peak_tokens": paged.peak_kv_tokens,
+        "mean_tokens": paged.mean_kv_tokens,
+        "pool_tokens": 64 * 16}
+
+    # ---- beyond-paper: real engine, paged vs contiguous KV ----
+    bench_real_engine(payload)
 
     # ---- beyond-paper: straggler mitigation + multi-replica scaling ----
-    wl = Workload(rate=100, duration=25.0, len_min=2, len_max=100, seed=1)
+    wl = Workload(rate=100, duration=dur, len_min=2, len_max=100, seed=1)
     base = simulate(wl, TURBO_CM, SimConfig(
         policy="dp", straggler_prob=0.05))
     mit = simulate(wl, TURBO_CM, SimConfig(
@@ -149,18 +270,25 @@ def run() -> None:
     emit("straggler_tail_latency", 0.0,
          f"max_unmitigated={base.latency_stats()[2]*1e3:.0f}ms_"
          f"mitigated={mit.latency_stats()[2]*1e3:.0f}ms")
-    r1 = curve("x", TURBO_CM, "dp", 2, 100, [200, 400, 800, 1600])[1]
+    r1 = curve("x", TURBO_CM, "dp", 2, 100, [200, 400, 800, 1600], dur)[1]
     r4 = 0.0
     for rate in (400, 800, 1600, 3200):
         rows = throughput_curve(
             [rate], TURBO_CM,
             SimConfig(policy="dp", max_batch_size=20, num_replicas=4),
-            duration=25.0, len_min=2, len_max=100)
+            duration=dur, len_min=2, len_max=100)
         if rows[0]["stable"]:
             r4 = max(r4, rows[0]["throughput"])
     emit("replica_scaling", 0.0,
          f"1rep={r1:.0f}_4rep={r4:.0f}_resp_per_sec")
+    payload["throughput"]["replica_scaling"] = {"1rep": r1, "4rep": r4}
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {OUT_PATH}", flush=True)
+    return payload
 
 
 if __name__ == "__main__":
-    run()
+    run(smoke=("--smoke" in sys.argv[1:] or
+               os.environ.get("BENCH_SMOKE") == "1"))

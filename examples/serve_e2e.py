@@ -78,6 +78,9 @@ def main() -> None:
     print("\ncontinuous batching: a request arriving mid-decode joins "
           "the next tick")
     backend = ContinuousEngine(engine, max_slots=8, cap_new=32)
+    print(f"  KV layout: {backend.kv_layout} "
+          f"(pool {backend.block_table.num_blocks - 1} x "
+          f"{backend.block_size}-token blocks)")
     system = ServingSystem(
         backend=backend, cost_model=cost,
         config=ServingConfig(policy=args.policy, strategy="hungry",
@@ -95,7 +98,8 @@ def main() -> None:
     assert late.state is SessionState.DECODE, "late request must join"
     assert not first.is_finished, "without draining the first request"
     print(f"  late request joined after {backend.decode_ticks} decode "
-          f"ticks of request 0 (live KV tokens: {backend.live_tokens})")
+          f"ticks of request 0 (live KV tokens: {backend.live_tokens}, "
+          f"blocks held: {backend.block_table.used_blocks})")
     system.drain()
     for resp in sorted(system.responses, key=lambda r: r.req_id):
         print(f"  req {resp.req_id}: {len(resp.result)} tokens, "

@@ -29,6 +29,25 @@ HBM_BW = 819e9
 ICI_BW_PER_LINK = 50e9
 
 
+# -- paged-KV admission accounting ------------------------------------------
+# Under a paged (block-table) cache the unit of KV capacity is a fixed-size
+# token block, so admission control must veto a prefill whose *block*
+# demand cannot be met even when the raw token count looks affordable.
+# These helpers are the single source of truth for that rounding — the
+# pipeline, the real engine and the simulator all charge the same number.
+
+def blocks_for_tokens(tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``tokens`` KV entries (ceil division)."""
+    if block_size <= 0:
+        raise ValueError(f"block_size must be positive, got {block_size}")
+    return -(-max(int(tokens), 0) // block_size)
+
+
+def block_round(tokens: int, block_size: int) -> int:
+    """``tokens`` rounded up to a whole number of blocks (in tokens)."""
+    return blocks_for_tokens(tokens, block_size) * block_size
+
+
 class CostModel:
     def latency(self, seq_len: int, batch: int) -> float:
         raise NotImplementedError

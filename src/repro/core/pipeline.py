@@ -64,6 +64,18 @@ class PipelineBackend:
         """Decode slots available for new admissions; None = unbounded."""
         return None
 
+    def free_kv_tokens(self) -> Optional[int]:
+        """KV capacity (in tokens) available for new admissions; None =
+        unbounded.  Paged backends report free *blocks* x block size so
+        admission is vetoed when a prefill cannot get blocks, independent
+        of how many decode slots are open."""
+        return None
+
+    def kv_demand(self, session: Session) -> int:
+        """Tokens of KV capacity admitting ``session`` will consume over
+        its lifetime (block-rounded by paged backends)."""
+        return session.total_len
+
     def validate(self, session: Session) -> None:
         """Raise ValueError for a session this backend can never serve
         (checked at submit time, before any state transition)."""
@@ -148,9 +160,24 @@ class ServingPipeline:
         return False
 
     def _admissible(self) -> List[Session]:
-        """Oldest queued sessions that fit the backend's free capacity."""
+        """Oldest queued sessions that fit the backend's free capacity:
+        decode slots AND free KV (block) budget.  The prefix stops at the
+        first session whose KV demand does not fit, preserving FIFO order
+        — the DP planner only ever sees prefills that can get blocks."""
         free = self.backend.free_slots()
-        return self.queue if free is None else self.queue[:free]
+        cand = self.queue if free is None else self.queue[:free]
+        kv_free = self.backend.free_kv_tokens()
+        if kv_free is None:
+            return cand
+        out: List[Session] = []
+        charged = 0
+        for s in cand:
+            demand = self.backend.kv_demand(s)
+            if charged + demand > kv_free:
+                break
+            charged += demand
+            out.append(s)
+        return out
 
     def _prefill_worthwhile(self, cand: List[Session]) -> bool:
         """Two-phase cost regime: is admitting these prefills worth

@@ -25,7 +25,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.cost_model import CostModel
+from repro.core.cost_model import CostModel, block_round
 from repro.core.pipeline import (PipelineBackend, PipelineConfig,
                                  PipelineStats, ServingPipeline)
 from repro.core.serving import Request, Response
@@ -84,6 +84,12 @@ class SimConfig:
     # finishes; "batch" holds every region until its whole prefill group
     # drains (the pre-refactor engine behavior, kept as a baseline)
     kv_free: str = "eos"
+    # paged-KV model: when kv_block_size is set, per-request KV charges
+    # are rounded up to whole blocks, and num_kv_blocks (if also set)
+    # bounds the pool — admission then vetoes prefills that cannot get
+    # blocks, mirroring the real engine's BlockTableManager
+    kv_block_size: Optional[int] = None
+    num_kv_blocks: Optional[int] = None
     # straggler model: with prob p a service takes x`slowdown`; if
     # mitigation is on, a straggling service is cut off at
     # `timeout_factor` x expected and re-executed (requeue), modelling
@@ -139,10 +145,27 @@ class VirtualBackend(PipelineBackend):
             return None
         return self.config.max_decode_slots - len(self.decoding)
 
+    def free_kv_tokens(self) -> Optional[int]:
+        cfg = self.config
+        if cfg.kv_block_size is None or cfg.num_kv_blocks is None:
+            return None
+        cap = cfg.num_kv_blocks * cfg.kv_block_size
+        return max(cap - sum(self._charge(t) for t in
+                             self.kv_live.values()), 0)
+
+    def kv_demand(self, session: Session) -> int:
+        return self._charge(session.total_len)
+
+    def _charge(self, tokens: int) -> int:
+        if self.config.kv_block_size is None:
+            return tokens
+        return block_round(tokens, self.config.kv_block_size)
+
     # -- KV accounting ---------------------------------------------------
     def _sample_kv(self) -> None:
         self.kv_timeline.append((self.clock.now,
-                                 sum(self.kv_live.values())))
+                                 sum(self._charge(t) for t in
+                                     self.kv_live.values())))
 
     def _on_finish(self, s: Session) -> None:
         if self.config.kv_free == "eos":

@@ -80,20 +80,41 @@ class ShardingRules:
 
 
 _STATE = threading.local()
+# Last mesh a rules context was installed for.  jax's trace cache does not
+# see this module's context (it is keyed on function + avals, not on our
+# thread-local), so a jaxpr traced under mesh A bakes A's device set into
+# its sharding_constraints; re-running the same function under mesh B then
+# dispatches the stale trace and fails with "incompatible devices".
+# Elastic resharding (train on (2,2), resume on (2,4)) hits exactly this.
+_LAST_MESH: Optional[Mesh] = None
 
 
 def current_rules() -> Optional[ShardingRules]:
     return getattr(_STATE, "rules", None)
 
 
+def _activate_mesh(rules: Optional[ShardingRules]) -> None:
+    global _LAST_MESH
+    if rules is None:
+        return
+    if _LAST_MESH is not None and rules.mesh != _LAST_MESH:
+        jax.clear_caches()
+    _LAST_MESH = rules.mesh
+
+
 @contextlib.contextmanager
 def sharding_rules(rules: Optional[ShardingRules]):
+    _activate_mesh(rules)
     prev = getattr(_STATE, "rules", None)
     _STATE.rules = rules
     try:
         yield rules
     finally:
         _STATE.rules = prev
+        # restoring an outer context with a different mesh re-activates
+        # that mesh — without this, a nested context's traces would be
+        # dispatched against the outer mesh's arrays
+        _activate_mesh(prev)
 
 
 def constrain(x: jax.Array, *logical_axes: Axis) -> jax.Array:

@@ -4,8 +4,8 @@
 ops.py exposes jit'd wrappers; ref.py holds the pure-jnp oracles.
 """
 from repro.kernels.ops import (flash_attention, flash_decode,
-                               fused_layernorm, fused_rmsnorm,
-                               fused_softmax)
+                               flash_decode_paged, fused_layernorm,
+                               fused_rmsnorm, fused_softmax)
 
-__all__ = ["flash_attention", "flash_decode", "fused_layernorm",
-           "fused_rmsnorm", "fused_softmax"]
+__all__ = ["flash_attention", "flash_decode", "flash_decode_paged",
+           "fused_layernorm", "fused_rmsnorm", "fused_softmax"]

@@ -21,6 +21,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed TPUCompilerParams -> CompilerParams across jax releases
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 NEG_INF = -1e30
 
 
@@ -129,7 +133,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((bq, 128), jnp.float32),
             pltpu.VMEM((bq, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -17,7 +17,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.flash_decode import (flash_decode_paged_pallas,
+                                        flash_decode_pallas)
 from repro.kernels.layernorm import norm_pallas
 from repro.kernels.softmax import softmax_pallas
 
@@ -92,3 +93,27 @@ def flash_decode(q, k, v, lengths=None, *, scale=None,
     return flash_decode_pallas(q, k, v, lengths, scale=scale,
                                num_splits=num_splits, block_k=block_k,
                                interpret=(impl == "interpret"))
+
+
+def flash_decode_paged(q, k_pool, v_pool, block_tables, lengths=None, *,
+                       scale=None, num_splits: int = 4,
+                       impl: str = "auto") -> jax.Array:
+    """Paged split-K decode attention over a block-table KV pool.
+
+    q: (B,H,dh); k_pool,v_pool: (NB,BS,KV,dh); block_tables: (B,MB)."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        # materialize the logical view, then the contiguous oracle
+        b, mb = block_tables.shape
+        bs = k_pool.shape[1]
+        k = k_pool[block_tables].reshape(
+            (b, mb * bs) + k_pool.shape[2:]).swapaxes(1, 2)  # (B,KV,S,dh)
+        v = v_pool[block_tables].reshape(
+            (b, mb * bs) + v_pool.shape[2:]).swapaxes(1, 2)
+        out = ref.flash_attention_ref(q[:, :, None, :], k, v, lengths,
+                                      causal=False, scale=scale)
+        return out[:, :, 0]
+    return flash_decode_paged_pallas(q, k_pool, v_pool, block_tables,
+                                     lengths, scale=scale,
+                                     num_splits=num_splits,
+                                     interpret=(impl == "interpret"))

@@ -46,7 +46,10 @@ def softmax_pallas(x: jax.Array, lengths=None, *, scale: float = 1.0,
     """x: (R, C); lengths: optional (R,) int32 valid lengths."""
     r, c = x.shape
     br = block_rows or default_block_rows(c)
-    br = min(br, max(8, pl.next_power_of_2(r) // 1 if r >= 8 else 8))
+    # never tile more rows than the (power-of-2-rounded) input has; the
+    # grid still covers a ragged tail block, whose out-of-range rows are
+    # discarded on write
+    br = min(br, pl.next_power_of_2(max(r, 8)))
     if lengths is None:
         lengths = jnp.full((r,), c, jnp.int32)
     len2d = lengths.astype(jnp.int32).reshape(r, 1)

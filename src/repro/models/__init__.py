@@ -2,10 +2,10 @@ from repro.models.transformer import (DEFAULT_RUNTIME, ModelRuntime,
                                       abstract_params, cache_specs,
                                       decode_step, forward_hidden,
                                       forward_train, init_params, make_cache,
-                                      prefill)
+                                      make_paged_cache, prefill)
 
 __all__ = [
     "DEFAULT_RUNTIME", "ModelRuntime", "abstract_params", "cache_specs",
     "decode_step", "forward_hidden", "forward_train", "init_params",
-    "make_cache", "prefill",
+    "make_cache", "make_paged_cache", "prefill",
 ]

@@ -343,6 +343,35 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
     return jax.eval_shape(lambda: make_cache(cfg, batch, max_len, dtype))
 
 
+def make_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
+                     block_size: int, max_blocks: int,
+                     dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """Allocate an empty *paged* decode cache.
+
+    K/V live in one pool of ``num_blocks`` fixed-size token blocks shared
+    by every sequence; ``block_tables`` (B, max_blocks) maps each row's
+    logical block index to a physical pool block.  Table entries default
+    to 0 — the reserved trash block — so unassigned logical blocks read
+    (masked) garbage and absorb stray writes instead of corrupting live
+    sequences.  Unlike the contiguous layout there is no per-row
+    ``max_len`` stripe: a row grows by appending table entries, and the
+    footprint is bounded by the pool, not by rows x horizon.
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError("paged KV applies to attention-family caches "
+                         "only (SSM state is O(1) per sequence)")
+    kv, dh = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "len": jnp.zeros((batch,), jnp.int32),
+        "pos_offset": jnp.zeros((batch,), jnp.int32),
+        "k": jnp.zeros((cfg.num_layers, num_blocks, block_size, kv, dh),
+                       dtype),
+        "v": jnp.zeros((cfg.num_layers, num_blocks, block_size, kv, dh),
+                       dtype),
+        "block_tables": jnp.zeros((batch, max_blocks), jnp.int32),
+    }
+
+
 def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
             max_len: int, rt: ModelRuntime = DEFAULT_RUNTIME,
             embeds_override: Optional[jax.Array] = None,
@@ -422,6 +451,9 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Dict[str, Any],
 
     if cfg.family in ("ssm", "hybrid"):
         new_cache, h = _decode_ssm(cfg, params, cache, h, positions, rt)
+    elif "block_tables" in cache:
+        new_cache, h = _decode_attn_paged(cfg, params, cache, h,
+                                          positions, rt)
     else:
         new_cache, h = _decode_attn(cfg, params, cache, h, positions, rt)
     h = L.apply_norm(cfg, params["final_norm"], h)
@@ -459,6 +491,65 @@ def _decode_attn(cfg, params, cache, h, positions, rt):
         else:
             out = L.apply_ffn(cfg, blk["ffn"], hn2)
         return h + out, (k_c, v_c)
+
+    h, (k_new, v_new) = lax.scan(
+        block, h, (params["layers"], cache["k"], cache["v"]))
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = k_new, v_new
+    return new_cache, h
+
+
+def _paged_write_kv(k_pool, v_pool, k, v, tables, pos):
+    """Scatter one new token per row into the paged pool.
+
+    k_pool: (NB, BS, KV, dh); k: (B, 1, KV, dh); tables: (B, MB);
+    pos: (B,) logical write position.  Rows whose position runs past the
+    table (a finished row frozen at its final length) are clamped — their
+    table entry is the trash block by then, so the write is absorbed
+    without touching any live sequence's blocks.
+    """
+    nb, bs = k_pool.shape[0], k_pool.shape[1]
+    mb = tables.shape[1]
+    pos_c = jnp.minimum(pos, mb * bs - 1)
+    blk = jnp.take_along_axis(tables, (pos_c // bs)[:, None], axis=1)[:, 0]
+    flat = blk * bs + pos_c % bs                          # (B,)
+
+    def upd(pool, new):
+        fp = pool.reshape((nb * bs,) + pool.shape[2:])
+        fp = fp.at[flat].set(new[:, 0].astype(pool.dtype))
+        return fp.reshape(pool.shape)
+    return upd(k_pool, k), upd(v_pool, v)
+
+
+def _paged_gather(pool, tables):
+    """Materialize each row's logical KV view from the pool:
+    (NB, BS, KV, dh) x (B, MB) -> (B, MB*BS, KV, dh).  Positions beyond a
+    row's length land in trash/unassigned blocks and are masked by
+    ``attention_decode``'s length mask."""
+    g = pool[tables]                                      # (B,MB,BS,KV,dh)
+    b, mb, bs = g.shape[:3]
+    return g.reshape((b, mb * bs) + g.shape[3:])
+
+
+def _decode_attn_paged(cfg, params, cache, h, positions, rt):
+    tables = cache["block_tables"]
+
+    def block(carry, xs):
+        h = carry
+        blk, k_p, v_p = xs
+        hn = L.apply_norm(cfg, blk["norm1"], h)
+        q, k, v = L.qkv_project(cfg, blk["attn"], hn, positions)
+        k_p, v_p = _paged_write_kv(k_p, v_p, k, v, tables, cache["len"])
+        k_seq = _paged_gather(k_p, tables)
+        v_seq = _paged_gather(v_p, tables)
+        attn = L.attention_decode(cfg, q, k_seq, v_seq, cache["len"] + 1)
+        h = h + L.attention_output(blk["attn"], attn)
+        hn2 = L.apply_norm(cfg, blk["norm2"], h)
+        if cfg.family == "moe":
+            out, _ = M.apply_moe(cfg, blk["moe"], hn2)
+        else:
+            out = L.apply_ffn(cfg, blk["ffn"], hn2)
+        return h + out, (k_p, v_p)
 
     h, (k_new, v_new) = lax.scan(
         block, h, (params["layers"], cache["k"], cache["v"]))

@@ -6,11 +6,12 @@ importing the engine here would close a cycle back through `repro.core`.
 """
 from repro.runtime.session import Session, SessionState
 
-__all__ = ["BucketLadder", "ContinuousEngine", "InferenceEngine",
-           "KVSlabManager", "Session", "SessionState",
+__all__ = ["BlockTableManager", "BucketLadder", "ContinuousEngine",
+           "InferenceEngine", "KVSlabManager", "Session", "SessionState",
            "kv_bytes_per_token", "ssm_state_bytes"]
 
 _LAZY = {
+    "BlockTableManager": ("repro.runtime.kv_cache", "BlockTableManager"),
     "BucketLadder": ("repro.runtime.bucketing", "BucketLadder"),
     "ContinuousEngine": ("repro.runtime.engine", "ContinuousEngine"),
     "InferenceEngine": ("repro.runtime.engine", "InferenceEngine"),

@@ -32,14 +32,16 @@ import numpy as np
 from jax import lax
 
 from repro.configs.base import ModelConfig
-from repro.core.cost_model import TableCostModel
+from repro.core.cost_model import TableCostModel, block_round
 from repro.core.pipeline import PipelineBackend
 from repro.core.serving import Request
 from repro.models import (ModelRuntime, DEFAULT_RUNTIME, decode_step,
-                          forward_hidden, make_cache, prefill)
+                          forward_hidden, make_cache, make_paged_cache,
+                          prefill)
 from repro.models.layers import lm_logits
 from repro.runtime.bucketing import BucketLadder
-from repro.runtime.kv_cache import (KVSlabManager, kv_bytes_per_token,
+from repro.runtime.kv_cache import (DEFAULT_KV_BLOCK, BlockTableManager,
+                                    KVSlabManager, kv_bytes_per_token,
                                     ssm_state_bytes)
 from repro.runtime.session import Session
 
@@ -308,11 +310,12 @@ class InferenceEngine:
         req_ids = [-(self._next_gen_id + i + 1)
                    for i in range(len(token_lists))]
         self._next_gen_id += len(token_lists)
-        for rid, l in zip(req_ids, lens):
-            self.kv_slab.allocate(
-                rid, per_tok * seq_b + fixed if per_tok else max(fixed, 1),
-                tokens=l + max_new_tokens)
         try:
+            for rid, l in zip(req_ids, lens):
+                self.kv_slab.allocate(
+                    rid,
+                    per_tok * seq_b + fixed if per_tok else max(fixed, 1),
+                    tokens=l + max_new_tokens)
             if max_new_tokens == 0:
                 return [list(t) for t in token_lists]
             if per_token_host_sync:
@@ -325,8 +328,12 @@ class InferenceEngine:
                 state = self.decode_step_batch(state)
             return self.read_out(state, token_lists)
         finally:
+            # allocate() may have failed partway (e.g. a duplicate id):
+            # freeing a never-allocated id would raise KeyError here and
+            # mask the original exception
             for rid in req_ids:
-                self.kv_slab.free(rid)
+                if self.kv_slab.has_region(rid):
+                    self.kv_slab.free(rid)
             self.kv_slab.gc()
 
     def _generate_host_synced(self, token_lists, max_new_tokens, seq_b):
@@ -372,37 +379,106 @@ class ContinuousEngine(PipelineBackend):
     ``max_slots`` sequences decode concurrently in one fused device step;
     newly admitted prefills are spliced into free slots *between* decode
     ticks, so arrivals join the next tick without waiting for in-flight
-    generations to drain.  A sequence's KV region is freed the moment it
-    hits EOS or its token budget — footprint tracks the live token set,
-    not the batch horizon.
+    generations to drain.  A sequence's KV is freed the moment it hits
+    EOS or its token budget — footprint tracks the live token set, not
+    the batch horizon.
 
-    Attention-family models only: SSM state could be spliced the same
-    way, but ragged prefill is unsupported for SSM so admission would be
-    restricted to equal-length groups (see ROADMAP open items).
+    Two KV layouts, selected by ``kv_layout``:
+
+    - ``"paged"`` (default, attention families only): K/V live in one
+      preallocated pool of ``block_size``-token blocks managed by a
+      :class:`BlockTableManager`.  Blocks covering the prompt are
+      allocated at admission and appended one at a time as decoding
+      crosses block boundaries, so a sequence longer than anything seen
+      so far needs no cache re-materialization — the old grow-by-pad
+      path is gone — and a prefill that cannot get blocks is vetoed at
+      admission (free-*block* accounting, not slot count).
+    - ``"contiguous"``: the PR-1 slot cache, each row a ``max_len``
+      stripe, kept as the equivalence baseline and for SSM/hybrid
+      families (their O(1) state cannot be paged; cross-layer shared-KV
+      leaves ride in the contiguous cache).  Hybrid/SSM admission is
+      restricted to equal-length prefill groups (ragged SSM prefill is
+      unsupported; see ROADMAP open items).
     """
 
     def __init__(self, engine: InferenceEngine, max_slots: int = 8,
                  max_len: Optional[int] = None, cap_new: int = 64,
                  sync_every: int = 1,
-                 clock: Callable[[], float] = time.monotonic) -> None:
+                 clock: Callable[[], float] = time.monotonic, *,
+                 kv_layout: str = "paged",
+                 block_size: int = DEFAULT_KV_BLOCK,
+                 num_blocks: Optional[int] = None) -> None:
         cfg = engine.cfg
-        if cfg.family in ("ssm", "hybrid") or cfg.num_codebooks:
-            raise ValueError("ContinuousEngine supports attention-family "
+        if cfg.num_codebooks:
+            raise ValueError("ContinuousEngine supports single-codebook "
                              "token models only")
+        if kv_layout not in ("paged", "contiguous"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if kv_layout == "paged" and cfg.family in ("ssm", "hybrid"):
+            raise ValueError("paged KV requires an attention-family "
+                             "model; use kv_layout='contiguous' for "
+                             "SSM/hybrid")
         self.engine = engine
         self.max_slots = max_slots
-        self.max_len = max_len      # fixed at first prefill when None
         self.cap_new = cap_new
         self.sync_every = sync_every
         self.clock = clock
+        self.kv_layout = kv_layout
+        self.block_size = block_size
+        self.block_table: Optional[BlockTableManager] = None
+        if kv_layout == "paged":
+            if max_len is None:
+                max_len = engine.ladder.seq_buckets[-1]
+            if max_len % block_size:
+                raise ValueError(f"max_len {max_len} must be a multiple "
+                                 f"of block_size {block_size}")
+            bad = [b for b in engine.ladder.seq_buckets
+                   if b % block_size]
+            if bad:
+                raise ValueError(f"ladder buckets {bad} not multiples of "
+                                 f"block_size {block_size}")
+            self.max_blocks = max_len // block_size
+            if num_blocks is not None:
+                self.block_table = BlockTableManager(num_blocks,
+                                                     block_size)
+            # num_blocks=None: the pool is sized at the FIRST prefill to
+            # max_slots x that admission's bucket — workload-derived like
+            # the contiguous lazy max_len, but shared: the token capacity
+            # is fungible across slots, so one later sequence may use
+            # many slots' worth of blocks (up to max_len) while short
+            # ones use few.  Pass num_blocks to size it explicitly.
+        self.max_len = max_len      # contiguous: fixed at first prefill
         self.sessions: List[Optional[Session]] = [None] * max_slots
         self.state: Optional[GenState] = None
+        # next KV write position per slot (mirrors device cache['len'];
+        # advanced conservatively, so a row that finished on device
+        # between host syncs may hold one extra block until the sync
+        # frees its table)
+        self._slot_len: List[int] = [0] * max_slots
+        # blocks a live request will still append (admission reserved
+        # them, so mid-decode appends can never fail)
+        self._reserved: Dict[int, int] = {}
         self._since_sync = 0
         self.decode_ticks = 0
 
     # -- PipelineBackend -------------------------------------------------
     def free_slots(self) -> int:
         return sum(1 for s in self.sessions if s is None)
+
+    def free_kv_tokens(self) -> Optional[int]:
+        """Token capacity of blocks neither held nor reserved — the
+        admission budget the pipeline charges ``kv_demand`` against.
+        Unbounded until the pool exists (the first prefill sizes it to
+        fit whatever batch triggered it)."""
+        if self.block_table is None:
+            return None
+        free = self.block_table.free_blocks - sum(self._reserved.values())
+        return max(free, 0) * self.block_size
+
+    def kv_demand(self, session: Session) -> int:
+        if self.kv_layout != "paged":
+            return session.total_len
+        return block_round(session.total_len, self.block_size)
 
     def validate(self, session: Session) -> None:
         """Reject un-servable sessions at submit time, before the
@@ -417,9 +493,22 @@ class ContinuousEngine(PipelineBackend):
         if self.engine.kv_slab.has_region(session.req_id):
             raise ValueError(f"session {session.req_id}: req_id already "
                              "in flight")
-        # once the slot cache exists it can grow up to the top ladder
-        # bucket; a constructor-fixed max_len with no state yet is the
-        # one hard ceiling below that
+        if self.kv_layout == "paged":
+            if session.total_len > self.max_len:
+                raise ValueError(
+                    f"session {session.req_id}: prompt+budget="
+                    f"{session.total_len} exceeds max_len {self.max_len}")
+            if self.block_table is not None:
+                demand = self.block_table.blocks_needed(session.total_len)
+                if demand > self.block_table.num_blocks - 1:
+                    raise ValueError(
+                        f"session {session.req_id}: needs {demand} KV "
+                        f"blocks but the pool holds "
+                        f"{self.block_table.num_blocks - 1}")
+            return
+        # contiguous: once the slot cache exists it can grow up to the
+        # top ladder bucket; a constructor-fixed max_len with no state
+        # yet is the one hard ceiling below that
         if self.state is None and self.max_len is not None:
             ceiling = self.max_len
         else:
@@ -447,21 +536,50 @@ class ContinuousEngine(PipelineBackend):
             raise ValueError(f"req_ids {dup} already hold KV regions "
                              "(duplicate in-flight submission?)")
         need = eng.ladder.seq_bucket(max(s.total_len for s in sessions))
+        if self.block_table is not None:
+            want = sum(self.block_table.blocks_needed(s.total_len)
+                       for s in sessions)
+            avail = self.block_table.free_blocks - \
+                sum(self._reserved.values())
+            if want > avail:
+                raise ValueError(
+                    f"prefill batch needs {want} KV blocks, only {avail} "
+                    "free — the admission planner should have vetoed "
+                    "this batch")
         self._ensure_state(need)
-        token_lists = [list(s.prompt) for s in sessions]
-        budgets = [s.max_new_tokens for s in sessions]
-        eos_ids = [s.eos_id for s in sessions]
-        rows = eng.prefill_batch(token_lists, max_len=self.max_len,
-                                 max_new_tokens=budgets, eos_id=eos_ids,
-                                 cap_new=self.cap_new)
         slots = [i for i, s in enumerate(self.sessions) if s is None]
         slots = slots[:len(sessions)]
         assert len(slots) == len(sessions), "admitted beyond free slots"
-        self._splice(rows, slots)
+        # ragged prefill is unsupported for SSM state, so SSM/hybrid
+        # admissions run as equal-prompt-length sub-batches; attention
+        # families prefill the whole (right-padded) group at once
+        if eng.cfg.family in ("ssm", "hybrid"):
+            groups: Dict[int, List[int]] = {}
+            for i, s in enumerate(sessions):
+                groups.setdefault(s.seq_len, []).append(i)
+            parts = list(groups.values())
+        else:
+            parts = [list(range(len(sessions)))]
+        for part in parts:
+            part_sessions = [sessions[i] for i in part]
+            part_slots = [slots[i] for i in part]
+            prefill_len = need if self.kv_layout == "paged" \
+                else self.max_len
+            rows = eng.prefill_batch(
+                [list(s.prompt) for s in part_sessions],
+                max_len=prefill_len,
+                max_new_tokens=[s.max_new_tokens for s in part_sessions],
+                eos_id=[s.eos_id for s in part_sessions],
+                cap_new=self.cap_new)
+            if self.kv_layout == "paged":
+                self._splice_paged(rows, part_slots, part_sessions)
+            else:
+                self._splice(rows, part_slots)
         now = self.clock()
         per_tok = kv_bytes_per_token(eng.cfg)
         for slot, s in zip(slots, sessions):
             self.sessions[slot] = s
+            self._slot_len[slot] = s.seq_len
             eng.kv_slab.allocate(s.req_id, max(per_tok * s.total_len, 1),
                                  tokens=s.total_len)
             s.start_decode(now, slot=slot)
@@ -469,6 +587,8 @@ class ContinuousEngine(PipelineBackend):
         self._sync()
 
     def decode_tick(self, sessions: List[Session]) -> None:
+        if self.kv_layout == "paged":
+            self._append_blocks()
         self.state = self.engine.decode_step_batch(self.state)
         self.decode_ticks += 1
         self._since_sync += 1
@@ -479,13 +599,25 @@ class ContinuousEngine(PipelineBackend):
     def _ensure_state(self, need_len: int) -> None:
         eng = self.engine
         if self.state is None:
-            if self.max_len is None:
-                self.max_len = need_len
-            if need_len > self.max_len:
-                raise ValueError(f"prompt+budget needs {need_len} > "
-                                 f"slot cache max_len {self.max_len}")
             B = self.max_slots
-            cache = make_cache(eng.cfg, B, self.max_len, jnp.float32)
+            if self.kv_layout == "paged":
+                if self.block_table is None:
+                    # lazy pool: max_slots x this admission's bucket of
+                    # blocks (+ trash) — workload-derived capacity that
+                    # any mix of sequence lengths up to max_len shares
+                    self.block_table = BlockTableManager(
+                        B * (need_len // self.block_size) + 1,
+                        self.block_size)
+                cache = make_paged_cache(
+                    eng.cfg, B, self.block_table.num_blocks,
+                    self.block_size, self.max_blocks, jnp.float32)
+            else:
+                if self.max_len is None:
+                    self.max_len = need_len
+                if need_len > self.max_len:
+                    raise ValueError(f"prompt+budget needs {need_len} > "
+                                     f"slot cache max_len {self.max_len}")
+                cache = make_cache(eng.cfg, B, self.max_len, jnp.float32)
             self.state = GenState(
                 cache=cache,
                 cur=jnp.zeros((B,), jnp.int32),
@@ -495,15 +627,39 @@ class ContinuousEngine(PipelineBackend):
                 budget=jnp.zeros((B,), jnp.int32),
                 eos=jnp.full((B,), -1, jnp.int32))
             return
+        if self.kv_layout == "paged":
+            return      # pool and tables are fixed-shape for life
         if need_len > self.max_len:
+            # contiguous fallback: re-materialize the slot cache with a
+            # longer sequence axis.  Every leaf with a seq axis must be
+            # padded — k/v AND the shared_k/shared_v leaves of
+            # cross-layer KV-sharing (hybrid) models, which the original
+            # version silently dropped, leaving their writes to clamp at
+            # the stale boundary.
             grow = need_len - self.max_len
             cache = dict(self.state.cache)
-            for k in ("k", "v"):
+            for k in ("k", "v", "shared_k", "shared_v"):
+                if k not in cache:
+                    continue
                 pad = [(0, 0)] * cache[k].ndim
-                pad[2] = (0, grow)          # (L, B, S, kv, dh) seq axis
+                pad[2] = (0, grow)      # (L|n_apps, B, S, kv, dh) seq axis
                 cache[k] = jnp.pad(cache[k], pad)
             self.state = replace(self.state, cache=cache)
             self.max_len = need_len
+
+    def _spliced(self, cache: Dict[str, jax.Array], rows: GenState,
+                 idx: jax.Array, k: int) -> GenState:
+        """New GenState: ``cache`` plus the first ``k`` per-row control
+        leaves of ``rows`` written at ``idx`` (shared by both layouts)."""
+        st = self.state
+        return GenState(
+            cache=cache,
+            cur=st.cur.at[idx].set(_rows(rows.cur, None, k)),
+            emitted=st.emitted.at[idx].set(_rows(rows.emitted, None, k)),
+            counts=st.counts.at[idx].set(_rows(rows.counts, None, k)),
+            done=st.done.at[idx].set(_rows(rows.done, None, k)),
+            budget=st.budget.at[idx].set(_rows(rows.budget, None, k)),
+            eos=st.eos.at[idx].set(_rows(rows.eos, None, k)))
 
     def _splice(self, rows: GenState, slots: List[int]) -> None:
         """Insert the first ``len(slots)`` rows of a freshly prefilled
@@ -518,14 +674,79 @@ class ContinuousEngine(PipelineBackend):
                 cache[key] = leaf.at[idx].set(src)
             else:
                 cache[key] = leaf.at[:, idx].set(src)
-        self.state = GenState(
-            cache=cache,
-            cur=st.cur.at[idx].set(_rows(rows.cur, None, k)),
-            emitted=st.emitted.at[idx].set(_rows(rows.emitted, None, k)),
-            counts=st.counts.at[idx].set(_rows(rows.counts, None, k)),
-            done=st.done.at[idx].set(_rows(rows.done, None, k)),
-            budget=st.budget.at[idx].set(_rows(rows.budget, None, k)),
-            eos=st.eos.at[idx].set(_rows(rows.eos, None, k)))
+        self.state = self._spliced(cache, rows, idx, k)
+
+    def _splice_paged(self, rows: GenState, slots: List[int],
+                      sessions: List[Session]) -> None:
+        """Allocate block tables for newly admitted sessions and scatter
+        their prefilled KV from the (temporary) contiguous prefill cache
+        into the paged pool — existing rows' blocks are untouched."""
+        btm = self.block_table
+        bs = self.block_size
+        st = self.state
+        k = len(slots)
+        idx = jnp.asarray(np.array(slots, np.int32))
+        src_len = rows.cache["k"].shape[2]        # prefill bucket length
+        cache = dict(st.cache)
+        k_pool, v_pool = cache["k"], cache["v"]
+        tables = cache["block_tables"]
+        for i, (slot, s) in enumerate(zip(slots, sessions)):
+            # blocks covering the prompt plus the first decode write; the
+            # rest of the budget is reserved and appended mid-decode
+            alloc_tokens = min(s.seq_len + 1, s.total_len)
+            bids = btm.allocate(s.req_id, alloc_tokens)
+            self._reserved[s.req_id] = max(
+                btm.blocks_needed(s.total_len) - len(bids), 0)
+            n_copy = min(len(bids), src_len // bs)
+            bid_arr = jnp.asarray(np.array(bids[:n_copy], np.int32))
+            seg_shape = (rows.cache["k"].shape[0], n_copy, bs) + \
+                rows.cache["k"].shape[3:]
+            k_pool = k_pool.at[:, bid_arr].set(
+                rows.cache["k"][:, i, :n_copy * bs].reshape(seg_shape))
+            v_pool = v_pool.at[:, bid_arr].set(
+                rows.cache["v"][:, i, :n_copy * bs].reshape(seg_shape))
+            row = np.zeros((self.max_blocks,), np.int32)
+            row[:len(bids)] = bids
+            tables = tables.at[slot].set(jnp.asarray(row))
+        cache["k"], cache["v"] = k_pool, v_pool
+        cache["block_tables"] = tables
+        for key in _BATCH_AXIS0:
+            cache[key] = cache[key].at[idx].set(
+                _rows(rows.cache[key], key, k))
+        self.state = self._spliced(cache, rows, idx, k)
+
+    def _append_blocks(self) -> None:
+        """Before a decode tick: every occupied slot is about to write KV
+        at its current length — append a pool block to any row crossing a
+        block boundary and publish it in the device block table."""
+        btm = self.block_table
+        upd_slots: List[int] = []
+        upd_idx: List[int] = []
+        upd_bid: List[int] = []
+        for slot, s in enumerate(self.sessions):
+            if s is None:
+                continue
+            pos = self._slot_len[slot]
+            if pos >= s.total_len:
+                continue      # budget exhausted; row is (about to be) done
+            fresh = btm.ensure(s.req_id, pos + 1)
+            if fresh:
+                self._reserved[s.req_id] = max(
+                    self._reserved[s.req_id] - len(fresh), 0)
+                base = btm.blocks_of(s.req_id) - len(fresh)
+                for off, bid in enumerate(fresh):
+                    upd_slots.append(slot)
+                    upd_idx.append(base + off)
+                    upd_bid.append(bid)
+            self._slot_len[slot] = pos + 1
+        if upd_slots:
+            st = self.state
+            cache = dict(st.cache)
+            cache["block_tables"] = cache["block_tables"].at[
+                jnp.asarray(np.array(upd_slots, np.int32)),
+                jnp.asarray(np.array(upd_idx, np.int32))].set(
+                jnp.asarray(np.array(upd_bid, np.int32)))
+            self.state = replace(st, cache=cache)
 
     def _sync(self) -> None:
         """Flush: read the (tiny) stop flags; only when an occupied slot
@@ -540,7 +761,7 @@ class ContinuousEngine(PipelineBackend):
         counts = np.asarray(st.counts)
         emitted = np.asarray(st.emitted)
         now = self.clock()
-        freed = False
+        freed_slots: List[int] = []
         for slot, s in enumerate(self.sessions):
             if s is None or not done[slot]:
                 continue
@@ -548,11 +769,32 @@ class ContinuousEngine(PipelineBackend):
             s.result = list(s.prompt or []) + s.generated
             s.finish(now)
             self.engine.kv_slab.free(s.req_id)
+            if self.block_table is not None:
+                self.block_table.free(s.req_id)
+                self._reserved.pop(s.req_id, None)
             self.sessions[slot] = None
-            freed = True
-        if freed:
+            self._slot_len[slot] = 0
+            freed_slots.append(slot)
+        if freed_slots:
             self.engine.kv_slab.gc()
+            if self.block_table is not None:
+                # point freed rows at the trash block: their device rows
+                # keep writing at a frozen position until re-admission,
+                # and the freed physical blocks may be re-assigned
+                st = self.state
+                cache = dict(st.cache)
+                cache["block_tables"] = cache["block_tables"].at[
+                    jnp.asarray(np.array(freed_slots, np.int32))].set(0)
+                self.state = replace(st, cache=cache)
 
     @property
     def live_tokens(self) -> int:
+        return self.engine.kv_slab.live_tokens
+
+    @property
+    def kv_footprint_tokens(self) -> int:
+        """Token capacity of the KV actually held: live paged blocks, or
+        the contiguous slab's live reservations."""
+        if self.block_table is not None:
+            return self.block_table.footprint_tokens
         return self.engine.kv_slab.live_tokens

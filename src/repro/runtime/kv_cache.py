@@ -1,13 +1,19 @@
-"""KV-cache slab manager: the serving-time role of the paper's allocator.
+"""KV-cache managers: the serving-time role of the paper's allocator.
 
 On GPU the paper's Algorithm 1 places *intermediate activation* tensors;
 under XLA those live inside the compiled step, so the variable-length
 memory problem moves to the KV cache: requests of wildly different lengths
-hold per-token state for their whole lifetime. We manage that state with
-the same chunked machinery — 2 MB-sized slabs, best-gap placement inside a
-chunk, chunk release when idle — which keeps footprint proportional to the
-*live* token count instead of the historical peak (paper Figs. 11/12, in
-KV form).
+hold per-token state for their whole lifetime.  Two managers cover the two
+cache layouts the serving engine supports:
+
+- :class:`KVSlabManager` — contiguous per-request regions placed with the
+  same chunked machinery as the paper's allocator (2 MB slabs, best-gap
+  placement, chunk release when idle);
+- :class:`BlockTableManager` — paged layout: fixed-size token blocks
+  carved from ONE preallocated pool, per-request block lists, free-list
+  recycling.  Footprint is bounded by *live* blocks (paper Figs. 11/12 in
+  KV form, at block granularity), and a sequence can grow past any initial
+  length estimate by appending blocks — no cache re-materialization.
 """
 from __future__ import annotations
 
@@ -15,6 +21,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
+from repro.core.cost_model import blocks_for_tokens
 
 DEFAULT_KV_CHUNK = 2 * 1024 * 1024
 K_SCALE = 1.2
@@ -150,3 +157,112 @@ class KVSlabManager:
         serving this tracks the *live* sequence set, dropping the moment
         a request hits EOS (paper Figs. 11/12, in KV form)."""
         return sum(r.tokens for r in self._regions.values())
+
+
+DEFAULT_KV_BLOCK = 16      # tokens per paged-KV block
+
+
+class BlockExhausted(RuntimeError):
+    """No free blocks left in the paged-KV pool."""
+
+
+class BlockTableManager:
+    """Block tables over one preallocated paged-KV pool.
+
+    ``num_blocks`` fixed-size blocks of ``block_size`` tokens each.  Block
+    index 0 is reserved as the *trash* block: it is never handed out, block
+    tables are initialized/reset to it, so stray writes from device rows
+    whose host-side bookkeeping lags (e.g. a sequence that hit EOS between
+    host syncs) land in a sink that no live sequence reads.
+
+    The manager is pure host-side accounting — the device pool array lives
+    in the engine's cache pytree; this class decides *which* physical block
+    each (request, logical block index) maps to, recycles freed blocks
+    through a free list, and reports live-token / live-block footprint.
+    """
+
+    def __init__(self, num_blocks: int,
+                 block_size: int = DEFAULT_KV_BLOCK) -> None:
+        if block_size <= 0:
+            raise ValueError(f"block_size must be positive: {block_size}")
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the trash "
+                             f"block), got {num_blocks}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # LIFO recycling: recently freed blocks are re-used first
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._tables: Dict[int, List[int]] = {}
+        self._tokens: Dict[int, int] = {}
+
+    # -- queries ---------------------------------------------------------
+    @property
+    def capacity_tokens(self) -> int:
+        """Tokens the whole pool can hold (trash block excluded)."""
+        return (self.num_blocks - 1) * self.block_size
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    @property
+    def footprint_tokens(self) -> int:
+        """Token capacity of the blocks currently held by live requests —
+        the paged analogue of :attr:`KVSlabManager.live_tokens`, bounded
+        by the live block set instead of per-request length reservations."""
+        return self.used_blocks * self.block_size
+
+    @property
+    def live_tokens(self) -> int:
+        """Tokens of KV state actually written by live requests."""
+        return sum(self._tokens.values())
+
+    def has_request(self, req_id: int) -> bool:
+        return req_id in self._tables
+
+    def block_table(self, req_id: int) -> List[int]:
+        return list(self._tables[req_id])
+
+    def blocks_of(self, req_id: int) -> int:
+        return len(self._tables[req_id])
+
+    def blocks_needed(self, tokens: int) -> int:
+        return blocks_for_tokens(tokens, self.block_size)
+
+    # -- allocation ------------------------------------------------------
+    def _take(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise BlockExhausted(
+                f"need {n} blocks, only {len(self._free)} free "
+                f"(pool {self.num_blocks - 1})")
+        return [self._free.pop() for _ in range(n)]
+
+    def allocate(self, req_id: int, tokens: int) -> List[int]:
+        """Admission-time allocation: blocks covering ``tokens``.
+        Returns the physical block ids, in logical order."""
+        if req_id in self._tables:
+            raise KeyError(f"request {req_id} already has a block table")
+        blocks = self._take(max(self.blocks_needed(tokens), 1))
+        self._tables[req_id] = blocks
+        self._tokens[req_id] = tokens
+        return list(blocks)
+
+    def ensure(self, req_id: int, tokens: int) -> List[int]:
+        """Grow ``req_id``'s table to cover ``tokens`` (mid-decode block
+        append).  Returns the newly appended physical block ids ([] when
+        the current table already covers the length)."""
+        table = self._tables[req_id]
+        need = self.blocks_needed(tokens) - len(table)
+        fresh = self._take(need) if need > 0 else []
+        table.extend(fresh)
+        self._tokens[req_id] = max(self._tokens[req_id], tokens)
+        return fresh
+
+    def free(self, req_id: int) -> None:
+        blocks = self._tables.pop(req_id)
+        self._tokens.pop(req_id)
+        self._free.extend(reversed(blocks))

@@ -33,7 +33,11 @@ def test_scan_multiplies_trip_count():
     p = analyze(c.as_text())
     assert p.flops == pytest.approx(10 * 2 * 8 * 64 * 64, rel=0.01)
     # XLA's own analysis undercounts by the trip count
-    assert c.cost_analysis()["flops"] < p.flops / 5
+    # (cost_analysis() returned a one-element list in older jax releases)
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    assert ca["flops"] < p.flops / 5
 
 
 def test_nested_scan():

@@ -40,6 +40,21 @@ def test_softmax_kernel(rows, cols, dtype, with_lengths):
     np.testing.assert_allclose(s, 1.0, rtol=1e-2)
 
 
+@pytest.mark.parametrize("rows,block_rows", [(100, 16), (33, 8), (5, 0)])
+def test_softmax_rows_not_multiple_of_block(rows, block_rows):
+    """Regression for the dead block-row clamp: row counts that do not
+    tile the grid exactly (ragged tail block, or fewer rows than the
+    minimum tile) must still match the oracle."""
+    cols = 64
+    x = jax.random.normal(jax.random.key(3), (rows, cols))
+    lengths = jax.random.randint(jax.random.key(5), (rows,), 1, cols + 1)
+    want = ref.softmax_ref(x, lengths, 1.0)
+    got = ops.fused_softmax(x, lengths, impl="interpret",
+                            block_rows=block_rows)
+    _assert_close(got, want, jnp.float32)
+    assert not np.isnan(np.asarray(got)).any()
+
+
 def test_softmax_xla_path_matches():
     x = jax.random.normal(jax.random.key(0), (16, 96))
     got = ops.fused_softmax(x, impl="xla")
@@ -160,6 +175,45 @@ def test_flash_decode_kernel(b, h, kv, s, dh, splits, bk, dtype):
         dict(rtol=5e-4, atol=5e-4)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), **tol)
+
+
+@pytest.mark.parametrize("b,h,kv,dh,bs,mb,nb,splits", [
+    (2, 4, 2, 32, 16, 4, 12, 2),    # GQA, shuffled pool, uneven lengths
+    (1, 4, 4, 64, 16, 3, 8, 4),     # splits > blocks-per-split coverage
+    (2, 2, 1, 32, 32, 2, 6, 1),     # MQA, single split
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_paged_kernel(b, h, kv, dh, bs, mb, nb, splits,
+                                   dtype):
+    """Paged split-K decode: the kv walk follows a per-row block table
+    through a shared pool instead of a contiguous stripe.  Must match
+    both the oracle and the contiguous kernel run on the materialized
+    logical view."""
+    rng = np.random.default_rng(bs + mb)
+    ks = jax.random.split(jax.random.key(b * h + dh), 3)
+    q = jax.random.normal(ks[0], (b, h, dh)).astype(dtype)
+    k_pool = jax.random.normal(ks[1], (nb, bs, kv, dh)).astype(dtype)
+    v_pool = jax.random.normal(ks[2], (nb, bs, kv, dh)).astype(dtype)
+    # disjoint physical blocks per row; block 0 stays trash
+    perm = rng.permutation(np.arange(1, nb))[:b * mb]
+    tables = jnp.asarray(perm.reshape(b, mb).astype(np.int32))
+    lengths = jnp.asarray(
+        rng.integers(1, mb * bs + 1, size=(b,)).astype(np.int32))
+    want = ops.flash_decode_paged(q, k_pool, v_pool, tables, lengths,
+                                  impl="xla")
+    got = ops.flash_decode_paged(q, k_pool, v_pool, tables, lengths,
+                                 num_splits=splits, impl="interpret")
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+    # token-for-token with the contiguous kernel over the same KV
+    k_c = k_pool[tables].reshape(b, mb * bs, kv, dh).swapaxes(1, 2)
+    v_c = v_pool[tables].reshape(b, mb * bs, kv, dh).swapaxes(1, 2)
+    contiguous = ops.flash_decode(q, k_c, v_c, lengths,
+                                  num_splits=splits, impl="interpret")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(contiguous, np.float32), **tol)
 
 
 def test_flash_matches_model_chunked_attention():

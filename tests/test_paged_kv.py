@@ -1,0 +1,304 @@
+"""Paged block-table KV cache: BlockTableManager accounting, paged-vs-
+contiguous ContinuousEngine equivalence, growth past the initial cache
+length without re-materialization, free-block admission vetoes, and the
+PR-1 bugfix sweep regressions (contiguous grow dropping shared_k/v,
+generate() masking allocation failures)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import AnalyticCostModel, ServingConfig, ServingSystem
+from repro.core.cost_model import block_round, blocks_for_tokens
+from repro.models import init_params
+from repro.runtime import BucketLadder, InferenceEngine
+from repro.runtime.engine import ContinuousEngine
+from repro.runtime.kv_cache import BlockExhausted, BlockTableManager
+from repro.runtime.session import Session, SessionState
+
+CM = AnalyticCostModel(flops_per_token=1e6, bytes_per_token=1e3,
+                       weight_bytes=1e6, overhead=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# BlockTableManager
+# ---------------------------------------------------------------------------
+
+def test_block_accounting_helpers():
+    assert blocks_for_tokens(0, 16) == 0
+    assert blocks_for_tokens(1, 16) == 1
+    assert blocks_for_tokens(16, 16) == 1
+    assert blocks_for_tokens(17, 16) == 2
+    assert block_round(33, 16) == 48
+    with pytest.raises(ValueError):
+        blocks_for_tokens(4, 0)
+
+
+def test_block_table_allocate_append_free_recycle():
+    btm = BlockTableManager(num_blocks=6, block_size=16)   # 5 usable
+    assert btm.capacity_tokens == 80 and btm.free_blocks == 5
+    a = btm.allocate(1, 20)                 # 2 blocks
+    assert len(a) == 2 and 0 not in a       # trash block never handed out
+    assert btm.used_blocks == 2 and btm.footprint_tokens == 32
+    assert btm.live_tokens == 20
+    fresh = btm.ensure(1, 33)               # grows to 3 blocks
+    assert len(fresh) == 1 and btm.blocks_of(1) == 3
+    assert btm.ensure(1, 40) == []          # already covered
+    b = btm.allocate(2, 30)                 # 2 more
+    assert set(a + fresh).isdisjoint(b)
+    assert btm.free_blocks == 0
+    with pytest.raises(BlockExhausted):
+        btm.allocate(3, 1)
+    btm.free(1)
+    assert btm.free_blocks == 3 and btm.used_blocks == 2
+    # freed blocks recycle
+    c = btm.allocate(3, 48)
+    assert set(c) == set(a + fresh)
+    with pytest.raises(KeyError):
+        btm.allocate(3, 1)                  # duplicate req
+    btm.free(2)
+    btm.free(3)
+    assert btm.used_blocks == 0 and btm.live_tokens == 0
+
+
+def test_block_table_rejects_degenerate_pools():
+    with pytest.raises(ValueError):
+        BlockTableManager(num_blocks=1, block_size=16)
+    with pytest.raises(ValueError):
+        BlockTableManager(num_blocks=8, block_size=0)
+
+
+# ---------------------------------------------------------------------------
+# Paged ContinuousEngine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.key(0))
+    return InferenceEngine(cfg, params, ladder=BucketLadder(
+        seq_buckets=(32, 64), batch_buckets=(1, 2, 4)))
+
+
+def _serve(engine, sessions, **ce_kwargs):
+    ce = ContinuousEngine(engine, **ce_kwargs)
+    sys_ = ServingSystem(backend=ce, cost_model=CM,
+                         config=ServingConfig(policy="dp",
+                                              max_batch_size=4))
+    for s in sessions:
+        sys_.submit(s)
+    sys_.drain()
+    return ce
+
+
+def test_paged_matches_contiguous_token_for_token(engine):
+    """Acceptance: the two layouts produce identical generations for the
+    same staggered workload."""
+    def mk():
+        return [Session(0, 3, 0.0, prompt=[1, 2, 3], max_new_tokens=9),
+                Session(1, 5, 0.0, prompt=[7, 8, 9, 4, 5],
+                        max_new_tokens=6),
+                Session(2, 2, 0.0, prompt=[11, 13], max_new_tokens=12)]
+    paged = mk()
+    contig = mk()
+    _serve(engine, paged, max_slots=4, cap_new=16, kv_layout="paged")
+    _serve(engine, contig, max_slots=4, cap_new=16,
+           kv_layout="contiguous")
+    for p, c in zip(paged, contig):
+        assert p.result == c.result
+    # and both match isolated generation
+    for s in paged:
+        assert s.result == engine.generate(
+            [list(s.prompt)], max_new_tokens=s.max_new_tokens)[0]
+
+
+def test_paged_admits_longer_than_initial_without_rematerialization(
+        engine):
+    """Acceptance: a sequence longer than the initial admissions needs no
+    cache re-materialization — the pool keeps its shape, the mid-flight
+    sequence is untouched, and block appends cover the growth."""
+    ce = ContinuousEngine(engine, max_slots=4, cap_new=16,
+                          kv_layout="paged")
+    sys_ = ServingSystem(backend=ce, cost_model=CM,
+                         config=ServingConfig(policy="dp",
+                                              max_batch_size=4))
+    a = Session(0, 3, 0.0, prompt=[1, 2, 3], max_new_tokens=14)
+    sys_.submit(a)
+    sys_.step()                       # prefill A (bucket 32)
+    sys_.step()                       # a couple of decode ticks
+    sys_.step()
+    pool_shape = ce.state.cache["k"].shape
+    tables_shape = ce.state.cache["block_tables"].shape
+    # total 40 > the 32-bucket the engine saw so far
+    b = Session(1, 30, 0.0, prompt=list(range(2, 32)), max_new_tokens=10)
+    sys_.submit(b)
+    sys_.step()                       # admission joins mid-decode
+    assert a.state is SessionState.DECODE
+    assert b.state is SessionState.DECODE
+    assert ce.state.cache["k"].shape == pool_shape
+    assert ce.state.cache["block_tables"].shape == tables_shape
+    sys_.drain()
+    assert a.result == engine.generate([[1, 2, 3]], max_new_tokens=14)[0]
+    assert b.result == engine.generate([list(range(2, 32))],
+                                       max_new_tokens=10)[0]
+
+
+def test_paged_footprint_bounded_by_live_blocks(engine):
+    """Acceptance: BlockTableManager footprint tracks live blocks —
+    growing with appends, dropping at EOS frees, empty after drain."""
+    ce = ContinuousEngine(engine, max_slots=4, cap_new=16,
+                          kv_layout="paged", block_size=16)
+    sys_ = ServingSystem(backend=ce, cost_model=CM,
+                         config=ServingConfig(policy="dp",
+                                              max_batch_size=4))
+    short = Session(0, 3, 0.0, prompt=[1, 2, 3], max_new_tokens=2)
+    long = Session(1, 14, 0.0, prompt=list(range(1, 15)),
+                   max_new_tokens=14)     # total 28: crosses a boundary
+    sys_.submit(short)
+    sys_.submit(long)
+    sys_.step()                       # joint prefill: 1 + 1 blocks held
+    btm = ce.block_table
+    assert btm.used_blocks == 2
+    while not short.is_finished:
+        sys_.step()
+    held_after_short = btm.used_blocks
+    assert not long.is_finished
+    # short's block went back to the free list; long holds 1-2 blocks
+    assert held_after_short <= 2
+    sys_.drain()
+    assert long.is_finished
+    assert btm.used_blocks == 0 and btm.live_tokens == 0
+    # long needed a second block mid-decode (28 tokens > 16)
+    assert long.result == engine.generate([list(range(1, 15))],
+                                          max_new_tokens=14)[0]
+
+
+def test_free_block_admission_veto(engine):
+    """Acceptance: the planner never dispatches a prefill that cannot get
+    blocks — with a pool of 4 usable blocks, two 3-block sessions are
+    served strictly one after the other."""
+    ce = ContinuousEngine(engine, max_slots=4, cap_new=48,
+                          kv_layout="paged", block_size=16, max_len=64,
+                          num_blocks=5)
+    sys_ = ServingSystem(backend=ce, cost_model=CM,
+                         config=ServingConfig(policy="dp",
+                                              max_batch_size=4))
+    a = Session(0, 3, 0.0, prompt=[1, 2, 3], max_new_tokens=40)   # 43 tok
+    b = Session(1, 3, 0.0, prompt=[4, 5, 6], max_new_tokens=40)
+    sys_.submit(a)
+    sys_.submit(b)
+    overlapped = False
+    for _ in range(400):
+        sys_.step()
+        overlapped |= (a.state is SessionState.DECODE and
+                       b.state is SessionState.DECODE)
+        if a.is_finished and b.is_finished:
+            break
+    assert a.is_finished and b.is_finished
+    assert not overlapped          # 3 + 3 blocks never fit 4
+    assert ce.block_table.used_blocks == 0
+    assert a.result == engine.generate([[1, 2, 3]], max_new_tokens=40)[0]
+
+
+def test_session_larger_than_pool_rejected_at_submit(engine):
+    ce = ContinuousEngine(engine, max_slots=2, cap_new=48,
+                          kv_layout="paged", block_size=16, max_len=64,
+                          num_blocks=4)     # 3 usable blocks = 48 tokens
+    sys_ = ServingSystem(backend=ce, cost_model=CM,
+                         config=ServingConfig(policy="dp"))
+    with pytest.raises(ValueError, match="KV blocks"):
+        sys_.submit(Session(0, 20, 0.0, prompt=[1] * 20,
+                            max_new_tokens=40))   # 60 tokens: 4 blocks
+    ok = Session(1, 3, 0.0, prompt=[1, 2, 3], max_new_tokens=4)
+    sys_.submit(ok)
+    sys_.drain()
+    assert ok.is_finished
+
+
+def test_paged_rejects_ssm_families():
+    cfg = get_smoke_config("zamba2-1.2b")
+    params = init_params(cfg, jax.random.key(0))
+    eng = InferenceEngine(cfg, params, ladder=BucketLadder(
+        seq_buckets=(32, 64), batch_buckets=(1, 2)))
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousEngine(eng, kv_layout="paged")
+
+
+# ---------------------------------------------------------------------------
+# PR-1 bugfix sweep regressions
+# ---------------------------------------------------------------------------
+
+def test_contiguous_grow_keeps_shared_kv_leaves():
+    """Regression: growing the contiguous slot cache past its initial
+    max_len must pad the shared_k/shared_v leaves of cross-layer
+    KV-sharing (hybrid) models too — the original grow path padded only
+    k/v, so shared-attention writes clamped at the stale boundary and
+    corrupted generations."""
+    cfg = get_smoke_config("zamba2-1.2b")
+    params = init_params(cfg, jax.random.key(0))
+    eng = InferenceEngine(cfg, params, ladder=BucketLadder(
+        seq_buckets=(32, 64), batch_buckets=(1, 2)))
+    ce = ContinuousEngine(eng, max_slots=2, cap_new=16,
+                          kv_layout="contiguous")
+    sys_ = ServingSystem(backend=ce, cost_model=CM,
+                         config=ServingConfig(policy="dp"))
+    a = Session(0, 4, 0.0, prompt=[1, 2, 3, 4], max_new_tokens=4)
+    sys_.submit(a)
+    sys_.drain()                      # slot cache fixed at bucket 32
+    assert ce.max_len == 32
+    prompt = list(range(2, 32))       # total 30 + 8 = 38 > 32: grow
+    b = Session(1, 30, 0.0, prompt=prompt, max_new_tokens=8)
+    sys_.submit(b)
+    sys_.drain()
+    assert ce.max_len == 64
+    assert ce.state.cache["shared_k"].shape[2] == 64
+    assert b.result == eng.generate([prompt], max_new_tokens=8)[0]
+
+
+def test_hybrid_mixed_length_admission_splits_groups():
+    """Regression: a prefill batch mixing prompt lengths on an SSM/hybrid
+    model must not crash the serving loop — the engine splits it into
+    equal-length sub-batches (ragged SSM prefill is unsupported)."""
+    cfg = get_smoke_config("zamba2-1.2b")
+    params = init_params(cfg, jax.random.key(0))
+    eng = InferenceEngine(cfg, params, ladder=BucketLadder(
+        seq_buckets=(32, 64), batch_buckets=(1, 2)))
+    ce = ContinuousEngine(eng, max_slots=2, cap_new=16,
+                          kv_layout="contiguous")
+    sys_ = ServingSystem(backend=ce, cost_model=CM,
+                         config=ServingConfig(policy="dp",
+                                              max_batch_size=2))
+    a = Session(0, 3, 0.0, prompt=[1, 2, 3], max_new_tokens=5)
+    b = Session(1, 5, 0.0, prompt=[4, 5, 6, 7, 8], max_new_tokens=5)
+    sys_.submit(a)
+    sys_.submit(b)
+    sys_.drain()
+    assert a.is_finished and a.error is None
+    assert b.is_finished and b.error is None
+    assert a.result == eng.generate([[1, 2, 3]], max_new_tokens=5)[0]
+    assert b.result == eng.generate([[4, 5, 6, 7, 8]],
+                                    max_new_tokens=5)[0]
+
+
+def test_generate_partial_alloc_failure_raises_original(engine,
+                                                        monkeypatch):
+    """Regression: if kv_slab.allocate fails partway through generate(),
+    the finally block must free only the regions that exist — not raise
+    KeyError over the never-allocated ids and mask the real error."""
+    orig = engine.kv_slab.allocate
+    calls = {"n": 0}
+
+    def flaky(req_id, size, tokens=0):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise ValueError("slab exhausted (injected)")
+        return orig(req_id, size, tokens=tokens)
+
+    monkeypatch.setattr(engine.kv_slab, "allocate", flaky)
+    with pytest.raises(ValueError, match="injected"):
+        engine.generate([[1, 2], [3, 4, 5]], max_new_tokens=2)
+    monkeypatch.undo()
+    assert engine.kv_slab.live_bytes == 0
+    # the engine still serves fine afterwards
+    out = engine.generate([[1, 2]], max_new_tokens=2)
+    assert len(out[0]) == 4

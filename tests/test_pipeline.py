@@ -329,6 +329,24 @@ def test_kv_footprint_tracks_live_tokens_under_continuous():
     assert any(b < a for a, b in zip(values, values[1:]))
 
 
+def test_simulator_paged_block_accounting_vetoes():
+    """With a bounded block pool the admission veto keeps the live KV
+    charge within the pool at all times, and every request still
+    completes (deferred, not dropped)."""
+    wl = Workload(rate=80, duration=5.0, len_min=2, len_max=40, seed=2,
+                  gen_tokens=12, gen_min=4)
+    cfg = SimConfig(policy="dp", admission="continuous",
+                    kv_block_size=16, num_kv_blocks=6)
+    res = simulate(wl, CM, cfg)
+    assert len(res.responses) == res.offered
+    assert res.peak_kv_tokens <= 6 * 16
+    # same block-rounded accounting, unbounded pool: peaks higher
+    uncapped = simulate(wl, CM, SimConfig(policy="dp",
+                                          admission="continuous",
+                                          kv_block_size=16))
+    assert uncapped.peak_kv_tokens > res.peak_kv_tokens
+
+
 def test_shared_config_not_mutated_across_systems():
     """Regression: ServingSystem must not share one default config
     instance across instances."""
