@@ -77,10 +77,8 @@ def main() -> None:
     # ---- phase 2: generative continuous batching ---------------------
     print("\ncontinuous batching: a request arriving mid-decode joins "
           "the next tick")
-    backend = ContinuousEngine(engine, max_slots=8, cap_new=32)
-    print(f"  KV layout: {backend.kv_layout} "
-          f"(pool {backend.block_table.num_blocks - 1} x "
-          f"{backend.block_size}-token blocks)")
+    backend = ContinuousEngine(engine, max_slots=8, cap_new=32,
+                               prefix_cache=True)
     system = ServingSystem(
         backend=backend, cost_model=cost,
         config=ServingConfig(policy=args.policy, strategy="hungry",
@@ -88,7 +86,10 @@ def main() -> None:
     first = Session(0, 6, time.monotonic(), prompt=[1, 2, 3, 4, 5, 6],
                     max_new_tokens=24)
     system.submit(first)
-    system.step()                     # prefill
+    system.step()                     # prefill (sizes the block pool)
+    print(f"  KV layout: {backend.kv_layout} "
+          f"(pool {backend.block_table.num_blocks - 1} x "
+          f"{backend.block_size}-token blocks, prefix cache on)")
     for _ in range(4):
         system.step()                 # a few decode ticks
     late = Session(1, 3, time.monotonic(), prompt=[7, 8, 9],
@@ -106,6 +107,34 @@ def main() -> None:
               f"latency {resp.latency*1e3:.0f}ms")
     print(f"  KV live after drain: {engine.kv_slab.live_bytes} bytes "
           f"(freed at EOS/budget, not batch end)")
+
+    # ---- phase 3: prefix reuse across requests -----------------------
+    print("\nprefix sharing: repeat system-prompt traffic hits the radix "
+          "prompt cache and prefills only the uncached suffix")
+    system_prompt = list(range(5, 5 + 32))        # 32-token preamble
+    pf_before = backend.prefill_tokens
+    warm = Session(10, 33, time.monotonic(),
+                   prompt=system_prompt + [40], max_new_tokens=4)
+    system.submit(warm)
+    system.drain()                                # cold: full prefill
+    cold_cost = backend.prefill_tokens - pf_before
+    followers = [Session(11 + i, 34, time.monotonic(),
+                         prompt=system_prompt + [50 + i, 60 + i],
+                         max_new_tokens=6) for i in range(3)]
+    pf_before = backend.prefill_tokens
+    for s in followers:
+        system.submit(s)
+    system.drain()
+    hot_cost = backend.prefill_tokens - pf_before
+    stats = backend.prefix_stats()
+    print(f"  cold request prefilled {cold_cost} tokens; {len(followers)} "
+          f"same-preamble followers prefilled {hot_cost} total")
+    print(f"  cache: {stats['hits']} hits, {stats['reused_tokens']} "
+          f"tokens served from shared blocks, "
+          f"{stats['cached_blocks']} blocks warm, "
+          f"{stats['cow_blocks']} copy-on-write copies")
+    assert stats["hits"] >= len(followers)
+    assert hot_cost < cold_cost * len(followers)
 
 
 if __name__ == "__main__":

@@ -7,7 +7,7 @@ for CPU tests). Shapes are global; the launcher divides by mesh axes.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 

@@ -15,7 +15,6 @@ benchmarks are apples-to-apples.
 from __future__ import annotations
 
 import bisect
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.allocator import TensorUsageRecord

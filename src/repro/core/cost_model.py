@@ -17,9 +17,8 @@ Two implementations:
 from __future__ import annotations
 
 import bisect
-import math
-from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 
@@ -46,6 +45,21 @@ def blocks_for_tokens(tokens: int, block_size: int) -> int:
 def block_round(tokens: int, block_size: int) -> int:
     """``tokens`` rounded up to a whole number of blocks (in tokens)."""
     return blocks_for_tokens(tokens, block_size) * block_size
+
+
+def prefix_fresh_blocks(total_tokens: int, cached_tokens: int,
+                        block_size: int) -> int:
+    """Fresh blocks a request consumes when ``cached_tokens`` of its
+    prompt are served from a shared prefix cache.
+
+    Only *whole* shared blocks are free: a cached prefix ending mid-block
+    still costs that block (the request copy-on-writes it before its
+    suffix lands there).  The real engine, the admission planner and the
+    simulator must all charge this same number, or plans validated in
+    simulation would diverge from hardware under prefix-heavy traffic.
+    """
+    return blocks_for_tokens(total_tokens, block_size) - \
+        max(int(cached_tokens), 0) // block_size
 
 
 class CostModel:

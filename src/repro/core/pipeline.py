@@ -24,7 +24,7 @@ simulation is the behavior deployed on hardware.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core.cost_model import CostModel
@@ -68,12 +68,21 @@ class PipelineBackend:
         """KV capacity (in tokens) available for new admissions; None =
         unbounded.  Paged backends report free *blocks* x block size so
         admission is vetoed when a prefill cannot get blocks, independent
-        of how many decode slots are open."""
+        of how many decode slots are open.  Prefix-sharing backends add
+        the capacity of cached blocks nobody references (reclaimable by
+        LRU eviction at admission) — so a full-looking pool still admits
+        when its contents are merely warm, not live."""
         return None
 
     def kv_demand(self, session: Session) -> int:
         """Tokens of KV capacity admitting ``session`` will consume over
-        its lifetime (block-rounded by paged backends)."""
+        its lifetime (block-rounded by paged backends).  Prefix-sharing
+        backends discount prompt blocks the session would share with
+        already-pinned cache entries — concurrent same-prefix sessions
+        then fit together where their summed raw lengths would not,
+        which is how cache hits turn into higher admission rates.  The
+        discount must never count capacity ``free_kv_tokens`` already
+        reported reclaimable, or the planner would double-spend it."""
         return session.total_len
 
     def validate(self, session: Session) -> None:

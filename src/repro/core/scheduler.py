@@ -14,8 +14,8 @@ to its own maximum, balancing zero-padding waste against batching gains.
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core.cost_model import CostModel
 

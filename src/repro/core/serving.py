@@ -24,7 +24,7 @@ from typing import Any, Callable, List, Optional, Sequence
 from repro.core.cost_model import CostModel
 from repro.core.pipeline import (PipelineBackend, PipelineConfig,
                                  ServingPipeline, plan_for_policy)
-from repro.runtime.session import Session, SessionState
+from repro.runtime.session import Session
 
 __all__ = ["Request", "Response", "ResponseCache", "ServingConfig",
            "ServingSystem", "plan_for_policy"]

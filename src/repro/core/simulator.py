@@ -25,7 +25,8 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.cost_model import CostModel, block_round
+from repro.core.cost_model import (CostModel, block_round,
+                                   prefix_fresh_blocks)
 from repro.core.pipeline import (PipelineBackend, PipelineConfig,
                                  PipelineStats, ServingPipeline)
 from repro.core.serving import Request, Response
@@ -44,6 +45,13 @@ class Workload:
     # synthetic EOS uniformly in [gen_min, gen_tokens] when gen_min is set
     gen_tokens: int = 0
     gen_min: Optional[int] = None
+    # prefix mix: with probability prefix_mix a request opens with the
+    # cohort's shared ``prefix_tokens``-token preamble (system prompt /
+    # few-shot header) in FRONT of its drawn length — the workload the
+    # prefix-sharing KV cache exists for.  prefix_tokens=0 leaves the rng
+    # stream untouched (older seeds reproduce exactly).
+    prefix_tokens: int = 0
+    prefix_mix: float = 0.0
 
     def generate_sessions(self) -> List[Session]:
         rng = random.Random(self.seed)
@@ -54,10 +62,16 @@ class Workload:
             t += rng.expovariate(self.rate)
             if t > self.duration:
                 break
+            base_len = rng.randint(self.len_min, self.len_max)
+            shared = 0
+            if self.prefix_tokens and rng.random() < self.prefix_mix:
+                shared = self.prefix_tokens
             s = Session(req_id=i,
-                        seq_len=rng.randint(self.len_min, self.len_max),
+                        seq_len=shared + base_len,
                         arrival_time=t,
-                        max_new_tokens=self.gen_tokens)
+                        max_new_tokens=self.gen_tokens,
+                        prefix_group=0 if shared else None,
+                        shared_prefix_len=shared)
             if self.gen_tokens and self.gen_min is not None:
                 s.eos_at = rng.randint(self.gen_min, self.gen_tokens)
             out.append(s)
@@ -90,6 +104,15 @@ class SimConfig:
     # blocks, mirroring the real engine's BlockTableManager
     kv_block_size: Optional[int] = None
     num_kv_blocks: Optional[int] = None
+    # prefix-sharing model (mirrors the real engine's RadixPrefixCache
+    # over a Workload prefix mix): once one member of a prefix cohort has
+    # prefilled, later members are charged only their uncached suffix —
+    # prefill time over suffix tokens, KV demand via the shared
+    # prefix_fresh_blocks() rounding — while the shared prefix KV is
+    # charged ONCE, in a cohort-level pool entry.  Divergence from the
+    # real cache: the simulator pins resident prefixes for the run (no
+    # LRU-eviction pressure model); hit accounting is otherwise aligned.
+    prefix_cache: bool = False
     # straggler model: with prob p a service takes x`slowdown`; if
     # mitigation is on, a straggling service is cut off at
     # `timeout_factor` x expected and re-executed (requeue), modelling
@@ -138,6 +161,11 @@ class VirtualBackend(PipelineBackend):
         self.kv_live = kv_live              # req_id -> held tokens
         self.kv_timeline = kv_timeline      # (virtual time, live tokens)
         self._groups: List[Dict[int, Session]] = []   # kv_free="batch"
+        # prefix cohorts resident in the (virtual) cache: group -> cached
+        # tokens; the shared KV is charged once, under a negative pool key
+        self._prefix_resident: Dict[int, int] = {}
+        self.prefix_hits = 0
+        self.prefix_tokens_saved = 0
 
     # -- capacity ------------------------------------------------------
     def free_slots(self) -> Optional[int]:
@@ -154,12 +182,26 @@ class VirtualBackend(PipelineBackend):
                              self.kv_live.values()), 0)
 
     def kv_demand(self, session: Session) -> int:
-        return self._charge(session.total_len)
+        cached = self._cached_for(session)
+        if self.config.kv_block_size is not None:
+            return prefix_fresh_blocks(
+                session.total_len, cached,
+                self.config.kv_block_size) * self.config.kv_block_size
+        return session.total_len - cached
 
     def _charge(self, tokens: int) -> int:
         if self.config.kv_block_size is None:
             return tokens
         return block_round(tokens, self.config.kv_block_size)
+
+    def _cached_for(self, s: Session) -> int:
+        """Shared-prefix tokens this session would reuse: its cohort's
+        resident prefix, capped so >= 1 suffix token stays to prefill
+        (the real matcher's cap)."""
+        if not self.config.prefix_cache or s.prefix_group is None:
+            return 0
+        resident = self._prefix_resident.get(s.prefix_group, 0)
+        return max(min(resident, s.shared_prefix_len, s.seq_len - 1), 0)
 
     # -- KV accounting ---------------------------------------------------
     def _sample_kv(self) -> None:
@@ -170,6 +212,24 @@ class VirtualBackend(PipelineBackend):
     def _on_finish(self, s: Session) -> None:
         if self.config.kv_free == "eos":
             self.kv_live.pop(s.req_id, None)
+
+    def _install_prefix(self, s: Session) -> int:
+        """First cohort member through prefill makes the shared prefix
+        resident (full blocks only — a mid-block tail is copy-on-write
+        private in the real cache); the cohort pool entry charges it
+        once.  Returns the tokens newly moved under the cohort entry so
+        the caller can leave them off the member's own charge."""
+        g = s.prefix_group
+        resident = s.shared_prefix_len
+        if self.config.kv_block_size is not None:
+            resident = (resident // self.config.kv_block_size) * \
+                self.config.kv_block_size
+        prev = self._prefix_resident.get(g, 0)
+        if resident > prev:
+            self._prefix_resident[g] = resident
+            self.kv_live[-(1000 + g)] = resident
+            return resident - prev
+        return 0
 
     def _sweep_groups(self) -> None:
         """Hold-to-batch-end accounting: release a prefill group's regions
@@ -187,14 +247,31 @@ class VirtualBackend(PipelineBackend):
     def prefill_batch(self, sessions: List[Session],
                       padded_len: int) -> None:
         b = len(sessions)
+        for s in sessions:
+            s.cached_tokens = self._cached_for(s)
+            if s.cached_tokens:
+                self.prefix_hits += 1
+                self.prefix_tokens_saved += s.cached_tokens
+        # prefix hits prefill only their uncached suffix: the batch pads
+        # to the longest *suffix*, mirroring the real engine's resumable
+        # suffix prefill
+        eff_len = max(s.seq_len - s.cached_tokens for s in sessions)
         self.clock.advance(
-            self.service(self.cost.prefill_latency(padded_len, b)))
+            self.service(self.cost.prefill_latency(max(eff_len, 1), b)))
         now = self.clock.now
         for s in sessions:
             if s.is_one_shot:
                 s.finish(now)
                 continue
-            self.kv_live[s.req_id] = s.total_len
+            installed = 0
+            if self.config.prefix_cache and s.prefix_group is not None:
+                installed = self._install_prefix(s)
+            # charge-once: tokens the cohort pool entry now covers are
+            # NOT also charged to the member — in the real engine the
+            # cold member's prompt blocks ARE the cached blocks (one
+            # physical copy, shared with the trie)
+            self.kv_live[s.req_id] = \
+                s.total_len - s.cached_tokens - installed
             s.start_decode(now)
             s.generated.append(1)        # first token comes from prefill
             if s.stop_after(1):
@@ -236,6 +313,9 @@ class SimResult:
     kv_timeline: List[Tuple[float, int]] = field(default_factory=list)
     batch_log: List[Tuple[int, ...]] = field(default_factory=list)
     stats: PipelineStats = field(default_factory=PipelineStats)
+    # prefix-sharing telemetry (SimConfig.prefix_cache runs)
+    prefix_hits: int = 0
+    prefix_tokens_saved: int = 0
 
     @property
     def throughput(self) -> float:
@@ -323,18 +403,22 @@ def simulate(workload: Workload, cost: CostModel,
     responses = []
     stats = PipelineStats()
     batch_log: List[Tuple[int, ...]] = []
+    prefix_hits = prefix_saved = 0
     for p in pipelines:
         for s in p.finished:
             responses.append(Response(s.req_id, s.arrival_time,
                                       s.finish_time, s.batch_size,
                                       s.padded_len))
         batch_log.extend(p.batch_log)
+        prefix_hits += p.backend.prefix_hits
+        prefix_saved += p.backend.prefix_tokens_saved
         for k in vars(stats):
             setattr(stats, k, getattr(stats, k) + getattr(p.stats, k))
     responses.sort(key=lambda r: (r.finish_time, r.req_id))
     return SimResult(responses, workload.duration, n,
                      kv_timeline=sorted(kv_timeline), batch_log=batch_log,
-                     stats=stats)
+                     stats=stats, prefix_hits=prefix_hits,
+                     prefix_tokens_saved=prefix_saved)
 
 
 def throughput_curve(rates: Sequence[float], cost: CostModel,

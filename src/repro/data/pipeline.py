@@ -7,10 +7,9 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass
-from typing import Iterator, List, Optional, Sequence, Tuple
+from typing import Iterator, List
 
 import jax
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.serving import Request

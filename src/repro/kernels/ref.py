@@ -7,7 +7,7 @@ over shape/dtype sweeps.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

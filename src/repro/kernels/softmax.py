@@ -17,7 +17,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _softmax_kernel(x_ref, len_ref, o_ref, *, cols: int, scale: float):

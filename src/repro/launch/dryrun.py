@@ -9,7 +9,7 @@ import re            # noqa: E402
 import time          # noqa: E402
 import traceback     # noqa: E402
 from functools import partial  # noqa: E402
-from typing import Any, Dict, Optional, Tuple  # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
 
 import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402

@@ -2,10 +2,11 @@ from repro.models.transformer import (DEFAULT_RUNTIME, ModelRuntime,
                                       abstract_params, cache_specs,
                                       decode_step, forward_hidden,
                                       forward_train, init_params, make_cache,
-                                      make_paged_cache, prefill)
+                                      make_paged_cache, prefill,
+                                      prefill_suffix)
 
 __all__ = [
     "DEFAULT_RUNTIME", "ModelRuntime", "abstract_params", "cache_specs",
     "decode_step", "forward_hidden", "forward_train", "init_params",
-    "make_cache", "make_paged_cache", "prefill",
+    "make_cache", "make_paged_cache", "prefill", "prefill_suffix",
 ]

@@ -8,7 +8,6 @@ sharding uses logical-axis annotations (`repro.distributed.constrain`).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -235,13 +234,18 @@ def attention_naive(cfg: ModelConfig, q, k, v, *, causal: bool = True,
 
 
 def attention_chunked(cfg: ModelConfig, q, k, v, *, causal: bool = True,
-                      q_block: int = 512, kv_block: int = 1024) -> jax.Array:
+                      q_block: int = 512, kv_block: int = 1024,
+                      q_offset: int = 0) -> jax.Array:
     """Memory-efficient online-softmax attention (flash-style in pure JAX).
 
     Scans q in blocks (outer lax.map) and kv in blocks (inner lax.scan with
     running max/denominator), so peak memory is O(q_block * kv_block) per
     (batch, kv_head) instead of O(S^2). This is the XLA execution path for
     long sequences and the oracle for kernels/flash_attention.py.
+
+    ``q_offset`` places the queries ``q_offset`` positions into the key
+    sequence (suffix prefill resuming after a cached prefix): query i is
+    causal against keys 0 .. q_offset + i.
     """
     b, sq, h, dh = q.shape
     sk = k.shape[1]
@@ -266,7 +270,7 @@ def attention_chunked(cfg: ModelConfig, q, k, v, *, causal: bool = True,
 
     def q_step(qi):
         qblk = qg[:, qi]                                   # (B,qb,H,dh)
-        q_ids = qi * q_block + jnp.arange(q_block)
+        q_ids = qi * q_block + jnp.arange(q_block) + q_offset
 
         def kv_step(carry, ki):
             acc, m, l = carry
@@ -295,7 +299,8 @@ def attention_chunked(cfg: ModelConfig, q, k, v, *, causal: bool = True,
         if causal:
             # only kv blocks that intersect the causal triangle
             n_used = jnp.minimum(
-                nk, (qi * q_block + q_block + kv_block - 1) // kv_block)
+                nk, (qi * q_block + q_block + q_offset + kv_block - 1)
+                // kv_block)
         (acc, m, l), _ = lax.scan(
             lambda c, ki: lax.cond(
                 (ki < n_used) if causal else True,

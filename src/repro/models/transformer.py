@@ -16,10 +16,8 @@ the engine donates for in-place updates.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -64,18 +62,28 @@ def _residual_constrain(rt: ModelRuntime, h: jax.Array) -> jax.Array:
 DEFAULT_RUNTIME = ModelRuntime()
 
 
-def _attn(cfg: ModelConfig, rt: ModelRuntime, q, k, v):
-    s = q.shape[1]
+def _attn(cfg: ModelConfig, rt: ModelRuntime, q, k, v,
+          q_offset: int = 0):
+    """Prefill attention dispatch.  ``q_offset > 0`` is the suffix-prefill
+    case: queries sit ``q_offset`` positions into the key sequence (k/v
+    carry the cached prefix in front); impl selection then keys on the
+    total attended length so a cache hit takes the same memory-bounded
+    path its cache-cold twin would."""
+    s = k.shape[1] if q_offset else q.shape[1]
     impl = rt.attn_impl
     if impl == "auto":
         impl = "chunked" if s >= rt.chunked_threshold else "naive"
     if impl == "chunked_train":
+        if q_offset:
+            raise ValueError("chunked_train is a training-path impl; "
+                             "suffix prefill supports naive/chunked")
         return L.attention_chunked_train(cfg, q, k, v, causal=True,
                                          q_block=rt.q_block)
     if impl == "chunked":
         return L.attention_chunked(cfg, q, k, v, causal=True,
-                                   q_block=rt.q_block, kv_block=rt.kv_block)
-    return L.attention_naive(cfg, q, k, v, causal=True)
+                                   q_block=rt.q_block, kv_block=rt.kv_block,
+                                   q_offset=q_offset)
+    return L.attention_naive(cfg, q, k, v, causal=True, q_offset=q_offset)
 
 
 def _num_shared_apps(cfg: ModelConfig) -> int:
@@ -153,10 +161,21 @@ def embed_inputs(cfg: ModelConfig, params: Params, tokens: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-def _block_attn_full(cfg, rt, blk, h, positions, collect_cache):
+def _block_attn_full(cfg, rt, blk, h, positions, collect_cache,
+                     prefix_kv=None, q_offset: int = 0):
+    """One attention block over a full (or suffix) sequence.  With
+    ``prefix_kv`` = (pk, pv), attention runs over [cached prefix, fresh
+    k/v] at query offset ``q_offset`` (suffix prefill); the collected
+    cache parts stay suffix-only — the prefix is already in the pool."""
     hn = L.apply_norm(cfg, blk["norm1"], h)
     q, k, v = L.qkv_project(cfg, blk["attn"], hn, positions)
-    attn = _attn(cfg, rt, q, k, v)
+    if prefix_kv is not None:
+        pk, pv = prefix_kv
+        k_all = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+    else:
+        k_all, v_all = k, v
+    attn = _attn(cfg, rt, q, k_all, v_all, q_offset=q_offset)
     h = h + L.attention_output(blk["attn"], attn)
     hn2 = L.apply_norm(cfg, blk["norm2"], h)
     aux = jnp.zeros((), jnp.float32)
@@ -427,6 +446,60 @@ def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
     if cfg.num_codebooks:
         return logits[:, :, 0], cache       # (B,K,V)
     return logits[:, 0], cache              # (B,V)
+
+
+def prefill_suffix(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                   prefix_k: jax.Array, prefix_v: jax.Array, *,
+                   prefix_len: int, rt: ModelRuntime = DEFAULT_RUNTIME,
+                   true_lengths: Optional[jax.Array] = None,
+                   cache_dtype=jnp.bfloat16):
+    """Resume a prompt pass after ``prefix_len`` cached tokens (the
+    prefix-sharing KV cache's suffix prefill).
+
+    ``tokens`` (B, S_suffix) holds the right-padded *uncached* remainder
+    of each prompt; ``prefix_k``/``prefix_v`` (L, B, prefix_len, KV, dh)
+    is the shared prefix KV gathered from the paged pool.  Queries run at
+    positions ``prefix_len ..`` (the paged path's position offset) and
+    each layer attends over [prefix, suffix] with the causal mask
+    continued across the seam, so the result is the same computation a
+    full-prompt prefill would have done for the suffix positions — only
+    the prefix's quadratic work is skipped.
+
+    Returns ``(last-token logits, {"k", "v"})`` where k/v are the
+    *suffix-only* cache parts (L, B, S_suffix, KV, dh): the caller
+    scatters them into its own (copy-on-write) blocks; the shared prefix
+    blocks are never written.  Attention families only — the paged
+    serving path this feeds already excludes SSM state and codebook
+    models.
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError("suffix prefill resumes attention KV only; SSM "
+                         "state cannot restart mid-sequence")
+    if cfg.num_codebooks:
+        raise ValueError("suffix prefill does not support codebook models")
+    bsz, seq = tokens.shape
+    h = embed_inputs(cfg, params, tokens)
+    positions = L.positions_for(cfg, (bsz, seq), 0, offset=prefix_len)
+
+    def block(carry, xs):
+        h = carry
+        blk, pk, pv = xs
+        h, _, kv = _block_attn_full(cfg, rt, blk, h, positions, True,
+                                    prefix_kv=(pk, pv),
+                                    q_offset=prefix_len)
+        return h, kv
+
+    h, (k_suf, v_suf) = lax.scan(
+        block, h, (params["layers"], prefix_k, prefix_v))
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    if true_lengths is None:
+        h_last = h[:, -1:]
+    else:
+        idx = (true_lengths - 1).astype(jnp.int32)
+        h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+    logits = L.lm_logits(cfg, params["embed"], h_last)
+    return logits[:, 0], {"k": k_suf.astype(cache_dtype),
+                          "v": v_suf.astype(cache_dtype)}
 
 
 # ---------------------------------------------------------------------------

@@ -7,7 +7,8 @@ importing the engine here would close a cycle back through `repro.core`.
 from repro.runtime.session import Session, SessionState
 
 __all__ = ["BlockTableManager", "BucketLadder", "ContinuousEngine",
-           "InferenceEngine", "KVSlabManager", "Session", "SessionState",
+           "InferenceEngine", "KVSlabManager", "PrefixMatch",
+           "RadixPrefixCache", "Session", "SessionState",
            "kv_bytes_per_token", "ssm_state_bytes"]
 
 _LAZY = {
@@ -16,6 +17,8 @@ _LAZY = {
     "ContinuousEngine": ("repro.runtime.engine", "ContinuousEngine"),
     "InferenceEngine": ("repro.runtime.engine", "InferenceEngine"),
     "KVSlabManager": ("repro.runtime.kv_cache", "KVSlabManager"),
+    "PrefixMatch": ("repro.runtime.prefix_cache", "PrefixMatch"),
+    "RadixPrefixCache": ("repro.runtime.prefix_cache", "RadixPrefixCache"),
     "kv_bytes_per_token": ("repro.runtime.kv_cache", "kv_bytes_per_token"),
     "ssm_state_bytes": ("repro.runtime.kv_cache", "ssm_state_bytes"),
 }

@@ -10,7 +10,7 @@ about the true executed shapes.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import Sequence, Tuple
 
 
 DEFAULT_BUCKETS: Tuple[int, ...] = (32, 64, 128, 256, 512, 1024, 2048, 4096)

@@ -37,12 +37,13 @@ from repro.core.pipeline import PipelineBackend
 from repro.core.serving import Request
 from repro.models import (ModelRuntime, DEFAULT_RUNTIME, decode_step,
                           forward_hidden, make_cache, make_paged_cache,
-                          prefill)
+                          prefill, prefill_suffix)
 from repro.models.layers import lm_logits
 from repro.runtime.bucketing import BucketLadder
-from repro.runtime.kv_cache import (DEFAULT_KV_BLOCK, BlockTableManager,
-                                    KVSlabManager, kv_bytes_per_token,
-                                    ssm_state_bytes)
+from repro.runtime.kv_cache import (DEFAULT_KV_BLOCK, BlockExhausted,
+                                    BlockTableManager, KVSlabManager,
+                                    kv_bytes_per_token, ssm_state_bytes)
+from repro.runtime.prefix_cache import PrefixMatch, RadixPrefixCache
 from repro.runtime.session import Session
 
 # cache pytree leaves whose batch axis is 0 (everything else batches on
@@ -182,6 +183,28 @@ class InferenceEngine:
             self.compile_count += 1
         return self._prefill_cache[key]
 
+    def _suffix_fn(self, prefix_len: int, suffix_b: int,
+                   batch_b: int) -> Callable:
+        """Compiled suffix prefill, one cell per (exact prefix length,
+        suffix bucket, batch bucket).  The prefix length is a static
+        shape — prefix KV arrives unpadded, gathered straight from the
+        paged pool — so workloads with a few distinct shared prefixes
+        compile a few cells, like any other bucket."""
+        key = ("sfx", prefix_len, suffix_b, batch_b)
+        if key not in self._prefill_cache:
+            cfg, rt = self.cfg, self.rt
+
+            @jax.jit
+            def pf(params, tokens, true_lengths, prefix_k, prefix_v):
+                return prefill_suffix(
+                    cfg, params, tokens, prefix_k, prefix_v,
+                    prefix_len=prefix_len, rt=rt,
+                    true_lengths=true_lengths, cache_dtype=jnp.float32)
+
+            self._prefill_cache[key] = pf
+            self.compile_count += 1
+        return self._prefill_cache[key]
+
     # ------------------------------------------------------------------
     # Batch padding
     # ------------------------------------------------------------------
@@ -258,11 +281,19 @@ class InferenceEngine:
         true_lens = np.array(lens + [1] * (batch_b - n), np.int32)
         logits, cache = self._prefill_fn(max_len, batch_b, prompt_b)(
             self.params, jnp.asarray(toks), jnp.asarray(true_lens))
+        return self._finish_gen_state(logits, cache, n, batch_b, budgets,
+                                      eos_ids, cap)
+
+    def _finish_gen_state(self, logits, cache, n: int, batch_b: int,
+                          budgets: Sequence[int], eos_ids: Sequence,
+                          cap: int) -> GenState:
+        """Shared tail of the prefill paths: seed the per-row control
+        state (first sampled token, emission buffer, budget/eos/done)
+        around an already-populated cache pytree."""
         cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         tok0 = cur if cur.ndim == 1 else cur[:, 0]
-
         budget = jnp.asarray(np.array(
-            budgets + [0] * (batch_b - n), np.int32))
+            list(budgets) + [0] * (batch_b - n), np.int32))
         eos = jnp.asarray(np.array(
             [(-1 if e is None else e) for e in eos_ids] +
             [-1] * (batch_b - n), np.int32))
@@ -271,6 +302,68 @@ class InferenceEngine:
         counts = jnp.minimum(jnp.ones((batch_b,), jnp.int32), budget)
         done = (counts >= budget) | ((tok0 == eos) & (counts > 0))
         return GenState(cache, cur, emitted, counts, done, budget, eos)
+
+    def prefill_suffix_batch(self, token_lists: Sequence[Sequence[int]], *,
+                             prefix_k: jax.Array, prefix_v: jax.Array,
+                             prefix_len: int,
+                             max_new_tokens,
+                             eos_id=None,
+                             cap_new: Optional[int] = None) -> GenState:
+        """Resumable suffix prefill: like :meth:`prefill_batch`, but the
+        first ``prefix_len`` tokens of every prompt are served from
+        ``prefix_k``/``prefix_v`` (shared-prefix KV gathered from the
+        paged pool, shape (L, B, prefix_len, KV, dh)) and only the
+        remaining suffix runs through the model, at positions offset by
+        the prefix.
+
+        The returned GenState's cache holds ONLY the suffix KV (k/v:
+        (L, B, suffix_bucket, ...)) with ``cache['len']`` already at the
+        FULL prompt lengths; it is meant for the continuous engine's
+        paged splice, which scatters the suffix into the request's own
+        blocks — never into the shared prefix blocks.
+        """
+        cfg = self.cfg
+        if cfg.family in ("ssm", "hybrid"):
+            raise ValueError("suffix prefill requires an attention-family "
+                             "model")
+        n = len(token_lists)
+        suffixes = [list(t)[prefix_len:] for t in token_lists]
+        lens = [len(s) for s in suffixes]
+        if min(lens) < 1:
+            raise ValueError("every prompt must keep >= 1 uncached token "
+                             "(the last position's logits seed decoding)")
+        suffix_b = self.ladder.seq_bucket(max(lens))
+        batch_b = self.ladder.batch_bucket(n)
+        budgets = list(max_new_tokens) if hasattr(max_new_tokens, "__len__") \
+            else [int(max_new_tokens)] * n
+        eos_ids = list(eos_id) if hasattr(eos_id, "__len__") \
+            else [eos_id] * n
+        cap = cap_new if cap_new is not None else max(max(budgets), 1)
+        if cap < max(budgets):
+            raise ValueError(f"cap_new={cap} cannot hold a "
+                             f"max_new_tokens={max(budgets)} budget")
+        toks = np.full((batch_b, suffix_b), self.pad_id, np.int32)
+        for i, t in enumerate(suffixes):
+            toks[i, :len(t)] = t
+        true_lens = np.array(lens + [1] * (batch_b - n), np.int32)
+        if prefix_k.shape[1] < batch_b:
+            pad = [(0, 0)] * prefix_k.ndim
+            pad[1] = (0, batch_b - prefix_k.shape[1])
+            prefix_k = jnp.pad(prefix_k, pad)
+            prefix_v = jnp.pad(prefix_v, pad)
+        logits, parts = self._suffix_fn(prefix_len, suffix_b, batch_b)(
+            self.params, jnp.asarray(toks), jnp.asarray(true_lens),
+            prefix_k, prefix_v)
+        cache = {
+            "len": jnp.asarray(np.array(
+                [prefix_len + ln for ln in lens] +
+                [1] * (batch_b - n), np.int32)),
+            "pos_offset": jnp.zeros((batch_b,), jnp.int32),
+            "k": parts["k"],
+            "v": parts["v"],
+        }
+        return self._finish_gen_state(logits, cache, n, batch_b, budgets,
+                                      eos_ids, cap)
 
     def decode_step_batch(self, state: GenState) -> GenState:
         """One decode tick for every live row of ``state`` — entirely on
@@ -399,6 +492,17 @@ class ContinuousEngine(PipelineBackend):
       leaves ride in the contiguous cache).  Hybrid/SSM admission is
       restricted to equal-length prefill groups (ragged SSM prefill is
       unsupported; see ROADMAP open items).
+
+    ``prefix_cache=True`` (paged only) adds cross-request prompt-prefix
+    sharing: admissions are matched against a
+    :class:`repro.runtime.prefix_cache.RadixPrefixCache`, matched blocks
+    are mapped straight into the new request's table (refcounted), only
+    the uncached suffix is prefilled (``prefill_suffix_batch``), a
+    partially-valid matched block is copied before the suffix writes into
+    it, a live sequence's first decode token copies its cached tail block
+    (copy-on-write), and unreferenced cached blocks are LRU-evicted when
+    admissions need the space.  Generated tokens are identical with the
+    cache on or off — only the prefill work and block footprint shrink.
     """
 
     def __init__(self, engine: InferenceEngine, max_slots: int = 8,
@@ -407,7 +511,8 @@ class ContinuousEngine(PipelineBackend):
                  clock: Callable[[], float] = time.monotonic, *,
                  kv_layout: str = "paged",
                  block_size: int = DEFAULT_KV_BLOCK,
-                 num_blocks: Optional[int] = None) -> None:
+                 num_blocks: Optional[int] = None,
+                 prefix_cache: bool = False) -> None:
         cfg = engine.cfg
         if cfg.num_codebooks:
             raise ValueError("ContinuousEngine supports single-codebook "
@@ -418,6 +523,9 @@ class ContinuousEngine(PipelineBackend):
             raise ValueError("paged KV requires an attention-family "
                              "model; use kv_layout='contiguous' for "
                              "SSM/hybrid")
+        if prefix_cache and kv_layout != "paged":
+            raise ValueError("prefix_cache requires kv_layout='paged' "
+                             "(sharing happens at block granularity)")
         self.engine = engine
         self.max_slots = max_slots
         self.cap_new = cap_new
@@ -426,6 +534,10 @@ class ContinuousEngine(PipelineBackend):
         self.kv_layout = kv_layout
         self.block_size = block_size
         self.block_table: Optional[BlockTableManager] = None
+        self._prefix_enabled = prefix_cache
+        self.prefix_cache: Optional[RadixPrefixCache] = None
+        self.prefill_tokens = 0      # tokens actually run through prefill
+        self.cow_blocks = 0          # copy-on-write block copies made
         if kv_layout == "paged":
             if max_len is None:
                 max_len = engine.ladder.seq_buckets[-1]
@@ -441,6 +553,8 @@ class ContinuousEngine(PipelineBackend):
             if num_blocks is not None:
                 self.block_table = BlockTableManager(num_blocks,
                                                      block_size)
+                if prefix_cache:
+                    self.prefix_cache = RadixPrefixCache(self.block_table)
             # num_blocks=None: the pool is sized at the FIRST prefill to
             # max_slots x that admission's bucket — workload-derived like
             # the contiguous lazy max_len, but shared: the token capacity
@@ -468,17 +582,34 @@ class ContinuousEngine(PipelineBackend):
     def free_kv_tokens(self) -> Optional[int]:
         """Token capacity of blocks neither held nor reserved — the
         admission budget the pipeline charges ``kv_demand`` against.
+        With the prefix cache on, cached blocks nobody else references
+        count as free: admission may reclaim them by LRU eviction.
         Unbounded until the pool exists (the first prefill sizes it to
         fit whatever batch triggered it)."""
         if self.block_table is None:
             return None
         free = self.block_table.free_blocks - sum(self._reserved.values())
+        if self.prefix_cache is not None:
+            free += self.prefix_cache.evictable_blocks()
         return max(free, 0) * self.block_size
 
     def kv_demand(self, session: Session) -> int:
         if self.kv_layout != "paged":
             return session.total_len
-        return block_round(session.total_len, self.block_size)
+        demand = block_round(session.total_len, self.block_size)
+        if self.prefix_cache is not None and session.prompt:
+            # Discount only matched full blocks OTHER holders already pin
+            # (ref >= 2): sharing those costs no capacity.  A matched
+            # block held only by the cache (ref 1) was counted evictable
+            # in free_kv_tokens, so discounting it too would double-count
+            # its capacity; a partial tail match is never discounted (its
+            # copy-on-write consumes a fresh block anyway).
+            m = self.prefix_cache.match(list(session.prompt),
+                                        take_refs=False)
+            shared = sum(1 for b in m.full_blocks
+                         if self.block_table.ref_count(b) >= 2)
+            demand -= shared * self.block_size
+        return max(demand, self.block_size)
 
     def validate(self, session: Session) -> None:
         """Reject un-servable sessions at submit time, before the
@@ -536,45 +667,115 @@ class ContinuousEngine(PipelineBackend):
             raise ValueError(f"req_ids {dup} already hold KV regions "
                              "(duplicate in-flight submission?)")
         need = eng.ladder.seq_bucket(max(s.total_len for s in sessions))
-        if self.block_table is not None:
-            want = sum(self.block_table.blocks_needed(s.total_len)
-                       for s in sessions)
-            avail = self.block_table.free_blocks - \
-                sum(self._reserved.values())
-            if want > avail:
-                raise ValueError(
-                    f"prefill batch needs {want} KV blocks, only {avail} "
-                    "free — the admission planner should have vetoed "
-                    "this batch")
         self._ensure_state(need)
         slots = [i for i, s in enumerate(self.sessions) if s is None]
         slots = slots[:len(sessions)]
         assert len(slots) == len(sessions), "admitted beyond free slots"
+        # prefix matching takes refcount holds on every matched block up
+        # front, so one session's LRU eviction (below) can never reclaim
+        # blocks a sibling in the same batch is about to share; every
+        # exit past this point either adopts the holds into a table or
+        # releases them (deficit veto below, parts-loop except sweep)
+        matches: Optional[List[PrefixMatch]] = None
+        if self.prefix_cache is not None:
+            matches = [self.prefix_cache.match(list(s.prompt))
+                       for s in sessions]
+        if self.block_table is not None:
+            btm = self.block_table
+            want = 0
+            for i, s in enumerate(sessions):
+                covered = len(matches[i].full_blocks) if matches else 0
+                want += btm.blocks_needed(s.total_len) - covered
+            deficit = want + sum(self._reserved.values()) - btm.free_blocks
+            if deficit > 0 and self.prefix_cache is not None:
+                deficit -= self.prefix_cache.evict(deficit)
+            if deficit > 0:
+                if matches:
+                    for m in matches:
+                        self.prefix_cache.release(m)
+                raise ValueError(
+                    f"prefill batch needs {want} fresh KV blocks beyond "
+                    f"reservations, pool has {btm.free_blocks} free — "
+                    "the admission planner should have vetoed this batch")
         # ragged prefill is unsupported for SSM state, so SSM/hybrid
-        # admissions run as equal-prompt-length sub-batches; attention
-        # families prefill the whole (right-padded) group at once
+        # admissions run as equal-prompt-length sub-batches; prefix-cache
+        # hits group by cached length (one suffix-prefill cell per
+        # distinct shared-prefix length); other attention families
+        # prefill the whole (right-padded) group at once
         if eng.cfg.family in ("ssm", "hybrid"):
             groups: Dict[int, List[int]] = {}
             for i, s in enumerate(sessions):
                 groups.setdefault(s.seq_len, []).append(i)
             parts = list(groups.values())
+        elif matches is not None:
+            groups = {}
+            for i, m in enumerate(matches):
+                groups.setdefault(m.cached_tokens, []).append(i)
+            parts = list(groups.values())
         else:
             parts = [list(range(len(sessions)))]
-        for part in parts:
-            part_sessions = [sessions[i] for i in part]
-            part_slots = [slots[i] for i in part]
-            prefill_len = need if self.kv_layout == "paged" \
-                else self.max_len
-            rows = eng.prefill_batch(
-                [list(s.prompt) for s in part_sessions],
-                max_len=prefill_len,
-                max_new_tokens=[s.max_new_tokens for s in part_sessions],
-                eos_id=[s.eos_id for s in part_sessions],
-                cap_new=self.cap_new)
-            if self.kv_layout == "paged":
-                self._splice_paged(rows, part_slots, part_sessions)
-            else:
-                self._splice(rows, part_slots)
+        try:
+            for part in parts:
+                part_sessions = [sessions[i] for i in part]
+                part_slots = [slots[i] for i in part]
+                part_matches = [matches[i] for i in part] \
+                    if matches is not None else None
+                cached = part_matches[0].cached_tokens \
+                    if part_matches is not None else 0
+                if cached:
+                    pk, pv = self._gather_prefix(part_matches, cached)
+                    rows = eng.prefill_suffix_batch(
+                        [list(s.prompt) for s in part_sessions],
+                        prefix_k=pk, prefix_v=pv, prefix_len=cached,
+                        max_new_tokens=[s.max_new_tokens
+                                        for s in part_sessions],
+                        eos_id=[s.eos_id for s in part_sessions],
+                        cap_new=self.cap_new)
+                else:
+                    prefill_len = need if self.kv_layout == "paged" \
+                        else self.max_len
+                    rows = eng.prefill_batch(
+                        [list(s.prompt) for s in part_sessions],
+                        max_len=prefill_len,
+                        max_new_tokens=[s.max_new_tokens
+                                        for s in part_sessions],
+                        eos_id=[s.eos_id for s in part_sessions],
+                        cap_new=self.cap_new)
+                if self.kv_layout == "paged":
+                    self._splice_paged(rows, part_slots, part_sessions,
+                                       part_matches)
+                else:
+                    self._splice(rows, part_slots)
+                self.prefill_tokens += sum(s.seq_len - cached
+                                           for s in part_sessions)
+        except Exception:
+            # a failed part must not leak the batch's tables or the
+            # matcher's holds: free() is a safe no-op for sessions that
+            # never got a table, release() for matches never adopted.
+            # Slots whose device rows an earlier part already spliced
+            # must ALSO be neutralized (tables -> trash block, done=True)
+            # — their freed blocks may be reallocated, and a still-live
+            # row would keep writing KV into them (cross-request
+            # corruption, not just a leak).
+            bad_slots: List[int] = []
+            for i, s in enumerate(sessions):
+                if self.block_table is not None and \
+                        self.block_table.has_request(s.req_id):
+                    bad_slots.append(slots[i])
+                    self.block_table.free(s.req_id)
+                    self._reserved.pop(s.req_id, None)
+                if matches is not None:
+                    self.prefix_cache.release(matches[i])
+            if bad_slots and self.kv_layout == "paged" \
+                    and self.state is not None:
+                st = self.state
+                idx = jnp.asarray(np.array(bad_slots, np.int32))
+                cache = dict(st.cache)
+                cache["block_tables"] = \
+                    cache["block_tables"].at[idx].set(0)
+                self.state = replace(st, cache=cache,
+                                     done=st.done.at[idx].set(True))
+            raise
         now = self.clock()
         per_tok = kv_bytes_per_token(eng.cfg)
         for slot, s in zip(slots, sessions):
@@ -583,6 +784,8 @@ class ContinuousEngine(PipelineBackend):
             eng.kv_slab.allocate(s.req_id, max(per_tok * s.total_len, 1),
                                  tokens=s.total_len)
             s.start_decode(now, slot=slot)
+        if self.prefix_cache is not None:
+            self._donate_prompts(sessions)
         # a budget-1 or instant-EOS prompt may be done already
         self._sync()
 
@@ -608,6 +811,8 @@ class ContinuousEngine(PipelineBackend):
                     self.block_table = BlockTableManager(
                         B * (need_len // self.block_size) + 1,
                         self.block_size)
+                if self._prefix_enabled and self.prefix_cache is None:
+                    self.prefix_cache = RadixPrefixCache(self.block_table)
                 cache = make_paged_cache(
                     eng.cfg, B, self.block_table.num_blocks,
                     self.block_size, self.max_blocks, jnp.float32)
@@ -676,35 +881,128 @@ class ContinuousEngine(PipelineBackend):
                 cache[key] = leaf.at[:, idx].set(src)
         self.state = self._spliced(cache, rows, idx, k)
 
+    def _donate_prompts(self, sessions: List[Session]) -> None:
+        """Donate every admitted prompt to the trie.  A donated partial
+        tail makes the owner's first decode write copy-on-write, which
+        needs one extra block later — so the tail is donated only when
+        that block can be reserved NOW (evicting warm cache if needed);
+        otherwise only the full-block prefix is cached.  This keeps the
+        reservation invariant (free blocks always cover reservations)
+        without charging speculative COW blocks at admission."""
+        btm = self.block_table
+        bs = self.block_size
+        for s in sessions:
+            table = btm.block_table(s.req_id)
+            tokens = list(s.prompt)
+            donate_tail = bool(s.seq_len % bs) and s.max_new_tokens > 0
+            if donate_tail:
+                deficit = sum(self._reserved.values()) + 1 - \
+                    btm.free_blocks
+                if deficit > 0:
+                    self.prefix_cache.evict(deficit)
+                if sum(self._reserved.values()) + 1 <= btm.free_blocks:
+                    self._reserved[s.req_id] += 1
+                else:
+                    donate_tail = False
+            if not donate_tail and s.seq_len % bs:
+                tokens = tokens[:(s.seq_len // bs) * bs]
+            self.prefix_cache.insert(tokens, table)
+            if donate_tail:
+                tail = table[(s.seq_len - 1) // bs]
+                if btm.ref_count(tail) == 1:
+                    # tail deduped against an existing node: the owner
+                    # keeps writing its private block, no COW coming
+                    self._reserved[s.req_id] -= 1
+
+    def _gather_prefix(self, matches: List[PrefixMatch], cached: int
+                       ) -> Tuple[jax.Array, jax.Array]:
+        """Materialize the matched prefix KV for a suffix-prefill group:
+        gather each session's matched blocks from the pool and trim to
+        the exact cached length (L, B, cached, KV, dh)."""
+        bs = self.block_size
+        nb = -(-cached // bs)
+        ids = np.zeros((len(matches), nb), np.int32)
+        for i, m in enumerate(matches):
+            blocks = list(m.full_blocks)
+            if m.tail_block is not None:
+                blocks.append(m.tail_block)
+            ids[i, :len(blocks)] = blocks
+        idx = jnp.asarray(ids)
+
+        def gather(pool):
+            g = pool[:, idx]                     # (L, B, nb, BS, kv, dh)
+            flat = (pool.shape[0], len(matches), nb * bs) + pool.shape[3:]
+            return g.reshape(flat)[:, :, :cached]
+
+        return (gather(self.state.cache["k"]),
+                gather(self.state.cache["v"]))
+
     def _splice_paged(self, rows: GenState, slots: List[int],
-                      sessions: List[Session]) -> None:
+                      sessions: List[Session],
+                      matches: Optional[List[PrefixMatch]] = None) -> None:
         """Allocate block tables for newly admitted sessions and scatter
         their prefilled KV from the (temporary) contiguous prefill cache
-        into the paged pool — existing rows' blocks are untouched."""
+        into the paged pool — existing rows' blocks are untouched.
+
+        With prefix matches, a session's table opens with the matched
+        shared blocks (refs transferred from the matcher); a partially
+        valid matched tail is copied into a private block first
+        (copy-on-write — the suffix writes into it); only the uncached
+        suffix KV is scattered."""
         btm = self.block_table
         bs = self.block_size
         st = self.state
         k = len(slots)
         idx = jnp.asarray(np.array(slots, np.int32))
-        src_len = rows.cache["k"].shape[2]        # prefill bucket length
         cache = dict(st.cache)
         k_pool, v_pool = cache["k"], cache["v"]
         tables = cache["block_tables"]
+        pool_blocks = k_pool.shape[1]
         for i, (slot, s) in enumerate(zip(slots, sessions)):
+            m = matches[i] if matches is not None else None
+            cached = 0
+            prefix_blocks: List[int] = []
+            if m is not None:
+                m.consumed = True      # holds transfer to the table below
+                cached = m.cached_tokens
+                prefix_blocks = list(m.full_blocks)
+                if m.tail_block is not None:
+                    try:
+                        cow = btm.take(1)[0]
+                    except BlockExhausted:
+                        for b in prefix_blocks:
+                            btm.unref(b)
+                        btm.unref(m.tail_block)
+                        raise
+                    k_pool = k_pool.at[:, cow].set(k_pool[:, m.tail_block])
+                    v_pool = v_pool.at[:, cow].set(v_pool[:, m.tail_block])
+                    btm.unref(m.tail_block)
+                    prefix_blocks.append(cow)
+                    self.cow_blocks += 1
             # blocks covering the prompt plus the first decode write; the
             # rest of the budget is reserved and appended mid-decode
             alloc_tokens = min(s.seq_len + 1, s.total_len)
-            bids = btm.allocate(s.req_id, alloc_tokens)
+            try:
+                bids = btm.allocate(s.req_id, alloc_tokens,
+                                    prefix_blocks=prefix_blocks)
+            except BlockExhausted:
+                for b in prefix_blocks:
+                    btm.unref(b)
+                raise
             self._reserved[s.req_id] = max(
                 btm.blocks_needed(s.total_len) - len(bids), 0)
-            n_copy = min(len(bids), src_len // bs)
-            bid_arr = jnp.asarray(np.array(bids[:n_copy], np.int32))
-            seg_shape = (rows.cache["k"].shape[0], n_copy, bs) + \
-                rows.cache["k"].shape[3:]
-            k_pool = k_pool.at[:, bid_arr].set(
-                rows.cache["k"][:, i, :n_copy * bs].reshape(seg_shape))
-            v_pool = v_pool.at[:, bid_arr].set(
-                rows.cache["v"][:, i, :n_copy * bs].reshape(seg_shape))
+            # scatter ONLY the uncached suffix KV into this request's
+            # blocks (flat pool indices; shared prefix blocks untouched)
+            suffix_len = s.seq_len - cached
+            pos = np.arange(cached, s.seq_len)
+            fidx = jnp.asarray(
+                np.asarray(bids, np.int32)[pos // bs] * bs + pos % bs)
+            flat_shape = (k_pool.shape[0], pool_blocks * bs) + \
+                k_pool.shape[3:]
+            k_pool = k_pool.reshape(flat_shape).at[:, fidx].set(
+                rows.cache["k"][:, i, :suffix_len]).reshape(k_pool.shape)
+            v_pool = v_pool.reshape(flat_shape).at[:, fidx].set(
+                rows.cache["v"][:, i, :suffix_len]).reshape(v_pool.shape)
             row = np.zeros((self.max_blocks,), np.int32)
             row[:len(bids)] = bids
             tables = tables.at[slot].set(jnp.asarray(row))
@@ -718,11 +1016,17 @@ class ContinuousEngine(PipelineBackend):
     def _append_blocks(self) -> None:
         """Before a decode tick: every occupied slot is about to write KV
         at its current length — append a pool block to any row crossing a
-        block boundary and publish it in the device block table."""
+        block boundary and publish it in the device block table.  With the
+        prefix cache on, a row whose write position lands in a block other
+        holders also map (its own prompt tail donated to the trie, e.g.)
+        copies that block first — copy-on-write keeps shared prompt KV
+        immutable."""
         btm = self.block_table
         upd_slots: List[int] = []
         upd_idx: List[int] = []
         upd_bid: List[int] = []
+        cow_old: List[int] = []
+        cow_new: List[int] = []
         for slot, s in enumerate(self.sessions):
             if s is None:
                 continue
@@ -738,10 +1042,28 @@ class ContinuousEngine(PipelineBackend):
                     upd_slots.append(slot)
                     upd_idx.append(base + off)
                     upd_bid.append(bid)
+            elif self.prefix_cache is not None:
+                bidx = pos // self.block_size
+                bid = btm.block_table(s.req_id)[bidx]
+                if btm.ref_count(bid) > 1:
+                    new = btm.copy_on_write(s.req_id, bidx)
+                    self._reserved[s.req_id] = max(
+                        self._reserved.get(s.req_id, 0) - 1, 0)
+                    self.cow_blocks += 1
+                    cow_old.append(bid)
+                    cow_new.append(new)
+                    upd_slots.append(slot)
+                    upd_idx.append(bidx)
+                    upd_bid.append(new)
             self._slot_len[slot] = pos + 1
         if upd_slots:
             st = self.state
             cache = dict(st.cache)
+            if cow_old:
+                oi = jnp.asarray(np.array(cow_old, np.int32))
+                ni = jnp.asarray(np.array(cow_new, np.int32))
+                cache["k"] = cache["k"].at[:, ni].set(cache["k"][:, oi])
+                cache["v"] = cache["v"].at[:, ni].set(cache["v"][:, oi])
             cache["block_tables"] = cache["block_tables"].at[
                 jnp.asarray(np.array(upd_slots, np.int32)),
                 jnp.asarray(np.array(upd_idx, np.int32))].set(
@@ -793,8 +1115,20 @@ class ContinuousEngine(PipelineBackend):
 
     @property
     def kv_footprint_tokens(self) -> int:
-        """Token capacity of the KV actually held: live paged blocks, or
-        the contiguous slab's live reservations."""
+        """Token capacity of the KV actually held: live paged blocks
+        (cached prefix blocks included — they occupy pool capacity until
+        evicted), or the contiguous slab's live reservations."""
         if self.block_table is not None:
             return self.block_table.footprint_tokens
         return self.engine.kv_slab.live_tokens
+
+    def prefix_stats(self) -> Dict[str, int]:
+        """Prefix-cache telemetry plus engine-side integration counters
+        (empty when prefix caching is off or the pool does not exist
+        yet)."""
+        if self.prefix_cache is None:
+            return {}
+        out = self.prefix_cache.stats()
+        out["cow_blocks"] = self.cow_blocks
+        out["prefill_tokens"] = self.prefill_tokens
+        return out

@@ -76,6 +76,13 @@ class Session:
     # simulator hook: synthetic EOS position (tokens emitted before stop);
     # None means the token budget is the only stop condition.
     eos_at: Optional[int] = None
+    # prefix-sharing hooks: cohort whose prompts open with the same
+    # ``shared_prefix_len`` tokens (simulator workloads mark these; the
+    # real engine matches actual token ids instead), and the cached
+    # tokens the serving backend actually reused at prefill (telemetry).
+    prefix_group: Optional[int] = None
+    shared_prefix_len: int = 0
+    cached_tokens: int = 0
 
     # -- constructors ----------------------------------------------------
     @classmethod

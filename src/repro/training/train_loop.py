@@ -13,11 +13,8 @@ Scale features:
 """
 from __future__ import annotations
 
-import os
-import time
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,6 +1,5 @@
 """Allocator (paper Algorithm 1) unit + hypothesis property tests."""
 import jax.numpy as jnp
-import pytest
 
 from _hypothesis_compat import given, settings, st
 

@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs import (ARCH_IDS, get_config, get_smoke_config,
                            shapes_for)
-from repro.models import (ModelRuntime, decode_step, forward_train,
+from repro.models import (decode_step,
                           init_params, prefill)
 from repro.models.io import synthetic_prompts, synthetic_train_batch
 from repro.models.layers import lm_logits

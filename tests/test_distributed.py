@@ -7,13 +7,11 @@ keep the default single device). The subprocess checks:
  - param/state specs divide or replicate every leaf,
  - mesh construction and the dry-run lowering path on a small config.
 """
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import pytest
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 

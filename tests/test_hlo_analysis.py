@@ -1,8 +1,4 @@
 """Loop-aware HLO analyzer validation against hand-computable programs."""
-import subprocess
-import sys
-import os
-import textwrap
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@ length without re-materialization, free-block admission vetoes, and the
 PR-1 bugfix sweep regressions (contiguous grow dropping shared_k/v,
 generate() masking allocation failures)."""
 import jax
-import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config

@@ -5,7 +5,7 @@ import jax
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.core import (AnalyticCostModel, PipelineConfig, Request,
+from repro.core import (AnalyticCostModel, Request,
                         ServingConfig, ServingPipeline, ServingSystem,
                         SimConfig, VirtualClock, Workload, simulate)
 from repro.core.simulator import VirtualBackend

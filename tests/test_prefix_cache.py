@@ -1,0 +1,482 @@
+"""Prefix-sharing KV cache: BlockTableManager refcounts (+ property-based
+invariants), RadixPrefixCache match/insert/evict mechanics, and the
+end-to-end ContinuousEngine integration — token-for-token equivalence with
+sharing on vs off, suffix-only prefill, admission + decode-time
+copy-on-write, LRU eviction under pool pressure, and simulator parity."""
+import jax
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_smoke_config
+from repro.core import (AnalyticCostModel, ServingConfig, ServingSystem,
+                        SimConfig, Workload, simulate)
+from repro.core.cost_model import prefix_fresh_blocks
+from repro.models import init_params
+from repro.runtime import BucketLadder, InferenceEngine
+from repro.runtime.engine import ContinuousEngine
+from repro.runtime.kv_cache import BlockExhausted, BlockTableManager
+from repro.runtime.prefix_cache import RadixPrefixCache
+from repro.runtime.session import Session, SessionState
+
+CM = AnalyticCostModel(flops_per_token=1e6, bytes_per_token=1e3,
+                       weight_bytes=1e6, overhead=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# BlockTableManager refcounts
+# ---------------------------------------------------------------------------
+
+def test_refcounted_sharing_and_cow():
+    btm = BlockTableManager(num_blocks=8, block_size=16)   # 7 usable
+    a = btm.allocate(1, 40)                                # 3 blocks
+    assert all(btm.ref_count(b) == 1 for b in a)
+    # share a's first two blocks into b's table (prefix match semantics)
+    btm.ref(a[0])
+    btm.ref(a[1])
+    b = btm.allocate(2, 48, prefix_blocks=[a[0], a[1]])
+    assert b[:2] == [a[0], a[1]] and b[2] not in a
+    assert btm.ref_count(a[0]) == 2
+    assert btm.free_blocks == 7 - 4                        # 4 distinct blocks
+    # freeing a returns only its private block; shared ones stay held
+    btm.free(1)
+    assert btm.free_blocks == 4
+    assert btm.ref_count(a[0]) == 1
+    # copy-on-write gives table 2 a private copy of the shared block
+    btm.ref(b[0])           # pretend a cache node also holds it
+    new = btm.copy_on_write(2, 0)
+    assert new != b[0] and btm.block_table(2)[0] == new
+    assert btm.ref_count(b[0]) == 1                        # cache hold left
+    btm.unref(b[0])
+    btm.free(2)
+    assert btm.free_blocks == 7 and btm.used_blocks == 0
+
+
+def test_free_unknown_req_id_is_noop():
+    """Satellite bugfix: engine error-path cleanup sweeps every session of
+    a failed batch; free() must not raise on ids that never got tables."""
+    btm = BlockTableManager(num_blocks=4, block_size=16)
+    btm.free(123)                      # never allocated
+    btm.allocate(1, 16)
+    btm.free(1)
+    btm.free(1)                        # double free
+    assert btm.free_blocks == 3
+
+
+def test_ref_rejects_trash_and_free_blocks():
+    btm = BlockTableManager(num_blocks=4, block_size=16)
+    with pytest.raises(ValueError):
+        btm.ref(0)                     # trash block
+    with pytest.raises(ValueError):
+        btm.ref(2)                     # free block has no holder to share
+    with pytest.raises(ValueError):
+        btm.unref(2)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "ensure", "free"]),
+                          st.integers(0, 5), st.integers(1, 70)),
+                min_size=1, max_size=40))
+def test_block_table_invariants(ops):
+    """Property: under any alloc/ensure/free interleaving (no sharing),
+    (1) the trash block is never handed out, (2) no block sits in two
+    tables, (3) free + live == usable pool, (4) freeing everything
+    restores the whole free list."""
+    btm = BlockTableManager(num_blocks=9, block_size=8)    # 8 usable
+    live = set()
+    for op, rid, tokens in ops:
+        try:
+            if op == "alloc" and rid not in live:
+                btm.allocate(rid, tokens)
+                live.add(rid)
+            elif op == "ensure" and rid in live:
+                btm.ensure(rid, tokens)
+            elif op == "free":
+                btm.free(rid)
+                live.discard(rid)
+        except BlockExhausted:
+            pass
+        held = [b for r in live for b in btm.block_table(r)]
+        assert 0 not in held                         # trash never allocated
+        assert len(held) == len(set(held))           # no double hand-out
+        assert btm.free_blocks + len(held) == btm.num_blocks - 1
+    for rid in list(live):
+        btm.free(rid)
+    assert btm.free_blocks == btm.num_blocks - 1
+    assert btm.used_blocks == 0 and btm.live_tokens == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 100), min_size=1, max_size=6),
+       st.integers(1, 100))
+def test_ensure_free_round_trip(token_steps, base):
+    """Property: grow a table through arbitrary ensure() steps; free()
+    must hand every block back."""
+    btm = BlockTableManager(num_blocks=64, block_size=8)
+    btm.allocate(0, base)
+    for t in token_steps:
+        btm.ensure(0, t)
+    btm.free(0)
+    assert btm.free_blocks == btm.num_blocks - 1
+
+
+# ---------------------------------------------------------------------------
+# RadixPrefixCache (host-side policy, no model)
+# ---------------------------------------------------------------------------
+
+def _cached_prompt(btm, cache, tokens):
+    """Simulate a request donating its prompt: allocate, insert, free."""
+    rid = id(tokens) % (1 << 30)
+    blocks = btm.allocate(rid, len(tokens))
+    cache.insert(tokens, blocks)
+    btm.free(rid)
+    return blocks
+
+
+def test_radix_match_full_partial_and_cap():
+    btm = BlockTableManager(num_blocks=32, block_size=4)
+    cache = RadixPrefixCache(btm)
+    prompt = list(range(100, 110))                 # chunks [4][4][2]
+    blocks = _cached_prompt(btm, cache, prompt)
+    assert cache.cached_blocks == 3
+    assert cache.evictable_blocks() == 3
+    # identical prompt: capped at len-1 -> 2 full blocks + 1-token tail
+    m = cache.match(prompt)
+    assert m.full_blocks == blocks[:2] and m.full_tokens == 8
+    assert m.tail_block == blocks[2] and m.tail_tokens == 1
+    assert m.cached_tokens == 9
+    assert btm.ref_count(blocks[0]) == 2           # match took holds
+    cache.release(m)
+    assert btm.ref_count(blocks[0]) == 1
+    # longer prompt diverging inside chunk 2: partial match of 1 token
+    m2 = cache.match(prompt[:9] + [999, 999, 999], take_refs=False)
+    assert m2.full_tokens == 8 and m2.tail_tokens == 1
+    # diverging inside chunk 1: full chunk 0 + partial of chunk-1 node
+    m3 = cache.match(prompt[:6] + [777] * 6, take_refs=False)
+    assert m3.full_blocks == blocks[:1] and m3.tail_tokens == 2
+    # unrelated prompt: miss
+    m4 = cache.match([1, 2, 3, 4, 5, 6], take_refs=False)
+    assert m4.cached_tokens == 0 and m4.tail_block is None
+
+
+def test_radix_insert_dedup_and_branching():
+    btm = BlockTableManager(num_blocks=32, block_size=4)
+    cache = RadixPrefixCache(btm)
+    a = _cached_prompt(btm, cache, [1, 2, 3, 4, 10, 11])
+    _cached_prompt(btm, cache, [1, 2, 3, 4, 20, 21])   # branches at chunk 1
+    assert cache.cached_blocks == 3                    # shared root chunk
+    assert btm.ref_count(a[0]) == 1
+    before = btm.free_blocks
+    _cached_prompt(btm, cache, [1, 2, 3, 4, 10, 11])   # full dedup
+    assert cache.cached_blocks == 3
+    assert btm.free_blocks == before
+
+
+def test_radix_lru_eviction_leaf_first():
+    btm = BlockTableManager(num_blocks=32, block_size=4)
+    cache = RadixPrefixCache(btm)
+    a = _cached_prompt(btm, cache, [1, 2, 3, 4, 5, 6, 7, 8])   # 2 nodes
+    _cached_prompt(btm, cache, [9, 9, 9, 9])                   # 1 node
+    m = cache.match([1, 2, 3, 4, 5, 6, 7, 8, 9])   # holds + touches a
+    free0 = btm.free_blocks
+    assert cache.evict(1) == 1         # only unreferenced node: b's
+    assert btm.free_blocks == free0 + 1
+    assert cache.match([9, 9, 9, 9, 1], take_refs=False).cached_tokens == 0
+    assert cache.evict(2) == 0         # a's path is match-held
+    cache.release(m)
+    # a's chain evicts leaf-first even though the root node is older
+    assert cache.evict(2) == 2
+    assert cache.cached_blocks == 0
+    assert btm.free_blocks == btm.num_blocks - 1
+    assert btm.ref_count(a[0]) == 0
+
+
+def test_radix_never_evicts_referenced_blocks():
+    btm = BlockTableManager(num_blocks=16, block_size=4)
+    cache = RadixPrefixCache(btm)
+    _cached_prompt(btm, cache, [1, 2, 3, 4, 5, 6, 7, 8])
+    m = cache.match([1, 2, 3, 4, 5, 6, 7, 8, 9])       # holds both blocks
+    assert m.full_tokens == 8
+    assert cache.evictable_blocks() == 0
+    assert cache.evict(5) == 0                         # nothing reclaimable
+    cache.release(m)
+    assert cache.evict(5) == 2
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: ContinuousEngine with prefix sharing
+# ---------------------------------------------------------------------------
+
+SYS = list(range(3, 3 + 32))       # 32-token shared system prompt
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.key(0))
+    return InferenceEngine(cfg, params, ladder=BucketLadder(
+        seq_buckets=(32, 64), batch_buckets=(1, 2, 4)))
+
+
+def _system(ce, max_batch_size=4):
+    return ServingSystem(backend=ce, cost_model=CM,
+                         config=ServingConfig(policy="dp",
+                                              max_batch_size=max_batch_size))
+
+
+def _specs():
+    return [(SYS + [101, 102, 103], 6), (SYS + [7, 8, 9, 10], 5),
+            ([1, 2, 3, 4], 8), (SYS + [101, 102, 103], 6)]
+
+
+def _serve(engine, prefix, specs, stagger=False):
+    ce = ContinuousEngine(engine, max_slots=4, cap_new=16,
+                          kv_layout="paged", prefix_cache=prefix)
+    sys_ = _system(ce)
+    sessions = [Session(i, len(p), 0.0, prompt=list(p), max_new_tokens=m)
+                for i, (p, m) in enumerate(specs)]
+    if stagger:
+        # warm the cache with the first request, then admit the rest
+        # mid-decode so hits exercise the suffix-prefill splice path
+        sys_.submit(sessions[0])
+        sys_.step()
+        sys_.step()
+        for s in sessions[1:]:
+            sys_.submit(s)
+    else:
+        for s in sessions:
+            sys_.submit(s)
+    sys_.drain()
+    return ce, sessions
+
+
+def test_prefix_token_for_token_and_suffix_only_prefill(engine):
+    """Acceptance: identical generations with sharing on vs off; a warm
+    cache turns repeat prompts into non-zero hits and strictly fewer
+    prefilled tokens."""
+    ce_off, off = _serve(engine, False, _specs(), stagger=True)
+    ce_on, on = _serve(engine, True, _specs(), stagger=True)
+    for a, b in zip(off, on):
+        assert a.result == b.result
+        assert a.error is None and b.error is None
+    stats = ce_on.prefix_stats()
+    assert stats["hits"] > 0 and stats["reused_tokens"] > 0
+    assert ce_on.prefill_tokens < ce_off.prefill_tokens
+    # the oracle: isolated generation without any serving machinery
+    for s in on[:2]:
+        assert s.result == engine.generate(
+            [list(s.prompt)], max_new_tokens=s.max_new_tokens)[0]
+
+
+def test_prefix_cow_on_mid_block_divergence(engine):
+    """Acceptance (COW divergence): a second prompt sharing the first's
+    prefix INTO the middle of a block must copy that block at admission,
+    leave the cached original intact, and still generate exactly what an
+    isolated engine would."""
+    p1 = SYS + [1, 2, 3, 4, 5, 6, 7, 8]
+    p2 = SYS + [1, 2, 3, 9, 9]            # diverges mid-chunk-2
+    ce = ContinuousEngine(engine, max_slots=4, cap_new=16,
+                          kv_layout="paged", prefix_cache=True)
+    sys_ = _system(ce)
+    a = Session(0, len(p1), 0.0, prompt=p1, max_new_tokens=4)
+    sys_.submit(a)
+    sys_.drain()
+    cows_before = ce.cow_blocks
+    m = ce.prefix_cache.match(p2, take_refs=False)
+    assert m.full_tokens == 32 and m.tail_tokens == 3
+    b = Session(1, len(p2), 0.0, prompt=p2, max_new_tokens=6)
+    sys_.submit(b)
+    sys_.drain()
+    assert ce.cow_blocks > cows_before
+    assert b.result == engine.generate([p2], max_new_tokens=6)[0]
+    assert a.result == engine.generate([p1], max_new_tokens=4)[0]
+
+
+def test_owner_decode_cow_keeps_cached_tail_pristine(engine):
+    """Acceptance (refcounted free + COW): a prompt whose tail block is
+    donated to the cache copies it before the first decode write; an
+    identical resubmission then reuses all-but-one prompt tokens and
+    still matches the isolated oracle."""
+    prompt = list(range(50, 70))           # 20 tokens: full block + 4 tail
+    ce = ContinuousEngine(engine, max_slots=2, cap_new=16,
+                          kv_layout="paged", prefix_cache=True)
+    sys_ = _system(ce)
+    a = Session(0, 20, 0.0, prompt=prompt, max_new_tokens=6)
+    sys_.submit(a)
+    sys_.drain()
+    assert ce.cow_blocks >= 1              # decode write copied the tail
+    assert ce.prefix_cache.cached_blocks == 2
+    pf_before = ce.prefill_tokens
+    b = Session(1, 20, 0.0, prompt=list(prompt), max_new_tokens=6)
+    sys_.submit(b)
+    sys_.drain()
+    assert ce.prefill_tokens == pf_before + 1     # only the last token
+    assert b.result == a.result
+    assert b.result == engine.generate([prompt], max_new_tokens=6)[0]
+
+
+def test_prefix_lru_eviction_under_pool_pressure(engine):
+    """Acceptance (LRU eviction): with a pool too small to keep the cache
+    warm, admitting a new prompt evicts unreferenced cached blocks
+    instead of failing, and every generation still matches the oracle."""
+    ce = ContinuousEngine(engine, max_slots=2, cap_new=16,
+                          kv_layout="paged", block_size=16, max_len=64,
+                          num_blocks=6, prefix_cache=True)    # 5 usable
+    sys_ = _system(ce)
+    p1 = list(range(200, 235))             # 35 tokens -> 3 blocks cached
+    a = Session(0, 35, 0.0, prompt=p1, max_new_tokens=4)
+    sys_.submit(a)
+    sys_.drain()
+    assert ce.prefix_cache.cached_blocks == 3
+    p2 = list(range(500, 530))             # distinct 30-token prompt
+    b = Session(1, 30, 0.0, prompt=p2, max_new_tokens=5)
+    sys_.submit(b)
+    sys_.drain()
+    assert ce.prefix_cache.evicted_blocks > 0
+    assert b.is_finished and b.error is None
+    assert a.result == engine.generate([p1], max_new_tokens=4)[0]
+    assert b.result == engine.generate([p2], max_new_tokens=5)[0]
+    # conservation: live tables drained; only cached blocks remain held
+    btm = ce.block_table
+    assert btm.used_blocks == ce.prefix_cache.cached_blocks
+
+
+def test_shared_blocks_raise_admission_concurrency(engine):
+    """Cache hits must translate into admission: two sessions whose RAW
+    block demand exceeds the pool fit together once their common prefix
+    is resident and pinned."""
+    ce = ContinuousEngine(engine, max_slots=4, cap_new=16,
+                          kv_layout="paged", block_size=16, max_len=64,
+                          num_blocks=8, prefix_cache=True)    # 7 usable
+    sys_ = _system(ce)
+    warm = Session(0, 33, 0.0, prompt=SYS + [40], max_new_tokens=1)
+    sys_.submit(warm)
+    sys_.drain()                           # SYS's 2 full blocks cached
+    # raw demand: 2 x ceil((33+8)/16) = 6 blocks + warm's cached 3 = 9 > 7
+    a = Session(1, 33, 0.0, prompt=SYS + [41], max_new_tokens=8)
+    b = Session(2, 33, 0.0, prompt=SYS + [42], max_new_tokens=8)
+    sys_.submit(a)
+    sys_.submit(b)
+    overlapped = False
+    for _ in range(200):
+        sys_.step()
+        overlapped |= (a.state is SessionState.DECODE and
+                       b.state is SessionState.DECODE)
+        if a.is_finished and b.is_finished:
+            break
+    assert a.is_finished and b.is_finished
+    assert overlapped                      # sharing made them concurrent
+    assert a.result == engine.generate([SYS + [41]], max_new_tokens=8)[0]
+    assert b.result == engine.generate([SYS + [42]], max_new_tokens=8)[0]
+
+
+def test_prefix_cache_requires_paged(engine):
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ContinuousEngine(engine, kv_layout="contiguous", prefix_cache=True)
+
+
+def test_misaligned_prompt_in_exact_fit_pool(engine):
+    """Regression (review): a misaligned prompt whose block demand
+    exactly fills the pool must serve — the engine skips the tail
+    donation instead of demanding a COW block it cannot reserve (the
+    planner-admits / engine-rejects mismatch)."""
+    ce = ContinuousEngine(engine, max_slots=2, cap_new=32,
+                          kv_layout="paged", block_size=16, max_len=64,
+                          num_blocks=4, prefix_cache=True)   # 3 usable
+    sys_ = _system(ce)
+    s = Session(0, 17, 0.0, prompt=list(range(1, 18)), max_new_tokens=15)
+    sys_.submit(s)                       # total 32 -> 2 blocks; fits
+    sys_.drain()
+    assert s.is_finished and s.error is None
+    assert s.result == engine.generate([list(range(1, 18))],
+                                       max_new_tokens=15)[0]
+    # tighter still: demand == whole pool (48 of 48 tokens)
+    t = Session(1, 17, 0.0, prompt=list(range(30, 47)), max_new_tokens=31)
+    sys_.submit(t)
+    sys_.drain()
+    assert t.is_finished and t.error is None
+
+
+def test_failed_part_neutralizes_spliced_rows(engine, monkeypatch):
+    """Regression (review): when a later part of a multi-group admission
+    fails, the already-spliced parts' tables are freed — their device
+    rows must be pointed at the trash block and frozen, or they would
+    keep writing KV into blocks later admissions reuse."""
+    import numpy as np
+    ce = ContinuousEngine(engine, max_slots=4, cap_new=16,
+                          kv_layout="paged", prefix_cache=True)
+    sys_ = _system(ce)
+    warm = Session(0, 33, 0.0, prompt=SYS + [40], max_new_tokens=2)
+    sys_.submit(warm)
+    sys_.drain()
+    monkeypatch.setattr(
+        engine, "prefill_suffix_batch",
+        lambda *a, **k: (_ for _ in ()).throw(
+            RuntimeError("injected device failure")))
+    miss = Session(1, 4, 0.0, prompt=[9, 9, 9, 9], max_new_tokens=4)
+    hit = Session(2, 34, 0.0, prompt=SYS + [41, 42], max_new_tokens=4)
+    sys_.submit(miss)
+    sys_.submit(hit)
+    with pytest.raises(RuntimeError, match="injected"):
+        sys_.step()
+    monkeypatch.undo()
+    assert miss.is_finished and miss.error is not None
+    assert hit.is_finished and hit.error is not None
+    btm = ce.block_table
+    assert not btm.has_request(1) and not btm.has_request(2)
+    tables = np.asarray(ce.state.cache["block_tables"])
+    done = np.asarray(ce.state.done)
+    for slot in range(ce.max_slots):
+        if ce.sessions[slot] is None:
+            assert done[slot] and (tables[slot] == 0).all()
+    # freed blocks are safely reusable: serving continues token-exact
+    a = Session(3, 34, 0.0, prompt=SYS + [41, 42], max_new_tokens=4)
+    sys_.submit(a)
+    sys_.drain()
+    assert a.result == engine.generate([SYS + [41, 42]],
+                                       max_new_tokens=4)[0]
+
+
+def test_chunked_attention_q_offset_matches_naive(engine):
+    """Suffix prefill's long-sequence path: attention_chunked with a
+    query offset must agree with the naive reference, so a cache hit
+    takes the memory-bounded path without changing results."""
+    import jax.numpy as jnp
+    from repro.models import layers as L
+    cfg = engine.cfg
+    key = jax.random.key(1)
+    kq, kk, kv_ = jax.random.split(key, 3)
+    P, S, H, D = 24, 9, cfg.num_heads, cfg.head_dim
+    q = jax.random.normal(kq, (2, S, H, D), jnp.float32)
+    k = jax.random.normal(kk, (2, P + S, cfg.num_kv_heads, D), jnp.float32)
+    v = jax.random.normal(kv_, (2, P + S, cfg.num_kv_heads, D), jnp.float32)
+    ref = L.attention_naive(cfg, q, k, v, causal=True, q_offset=P)
+    out = L.attention_chunked(cfg, q, k, v, causal=True, q_block=4,
+                              kv_block=8, q_offset=P)
+    assert jnp.allclose(ref, out, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Simulator parity
+# ---------------------------------------------------------------------------
+
+def test_simulator_prefix_modelling_saves_kv_and_counts_hits():
+    cm = AnalyticCostModel(flops_per_token=2 * 110e6, bytes_per_token=2e4,
+                           weight_bytes=2.2e8, overhead=2.6e-3,
+                           peak_flops=6.5e12, hbm_bw=336e9)
+    wl = Workload(rate=40, duration=4.0, len_min=4, len_max=40, seed=0,
+                  gen_tokens=16, gen_min=4, prefix_tokens=48,
+                  prefix_mix=0.75)
+    kw = dict(policy="dp", admission="continuous", kv_block_size=16,
+              num_kv_blocks=256)
+    base = simulate(wl, cm, SimConfig(**kw))
+    shared = simulate(wl, cm, SimConfig(prefix_cache=True, **kw))
+    assert base.prefix_hits == 0
+    assert shared.prefix_hits > 0 and shared.prefix_tokens_saved > 0
+    assert shared.peak_kv_tokens < base.peak_kv_tokens
+    assert shared.throughput >= base.throughput
+
+
+def test_prefix_fresh_blocks_rounding():
+    assert prefix_fresh_blocks(40, 0, 16) == 3
+    assert prefix_fresh_blocks(40, 32, 16) == 1
+    assert prefix_fresh_blocks(40, 19, 16) == 2   # mid-block tail not free
+    assert prefix_fresh_blocks(16, 15, 16) == 1

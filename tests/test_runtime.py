@@ -2,7 +2,6 @@
 model warm-up, usage-record extraction on a transformer."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from _hypothesis_compat import given, settings, st

@@ -3,8 +3,6 @@ MQ -> scheduler -> engine, plus the discrete-event simulator's paper-level
 claims (DP > naive > nobatch throughput; naive < nobatch on high-variance
 lengths)."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config

@@ -1,12 +1,10 @@
 """Additional serving-framework coverage: lazy strategy, SLO trigger,
 data pipeline determinism, cost-model properties."""
-import time
 
-import pytest
 
 from _hypothesis_compat import given, settings, st
 
-from repro.core import (AnalyticCostModel, BucketedCostModel, Request,
+from repro.core import (AnalyticCostModel, Request,
                         ServingConfig, ServingSystem)
 from repro.data import LengthDistribution, RequestGenerator, TokenStream
 from repro.configs import get_smoke_config

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.core import (AnalyticCostModel, BucketedCostModel, Request,
+from repro.core import (AnalyticCostModel, BucketedCostModel,
                         SequenceAwareAllocator, ServingConfig,
                         ServingSystem, dp_schedule, naive_schedule,
                         records_for_fn, validate_plan)
