@@ -14,15 +14,40 @@ reproduced claims.
 
 Beyond-paper sections: continuous-vs-drain admission, KV footprint under
 eos-early-free, a REAL-engine comparison of the paged block-table KV
-cache against the contiguous slot cache (throughput + footprint), and a
+cache against the contiguous slot cache (throughput + footprint), a
 ``--prefix-mix`` shared-system-prompt workload through the refcounted
 prefix-sharing cache (hit rate, blocks saved, prefill-token savings,
-simulated + real engine, sharing on vs off).
+simulated + real engine, sharing on vs off), and a chunked-prefill
+decode-stall study on a mixed long/short-prompt workload.
 
 Every run writes a machine-readable trajectory to ``BENCH_serving.json``
 (cwd).  ``--smoke`` / ``BENCH_SMOKE=1`` shrinks durations so CI can keep
 the file schema valid on every push; the paper-claim assertions only run
 at full scale.
+
+``BENCH_serving.json`` schema (``bench_serving/v3``), ``chunked_prefill``
+section::
+
+    chunked_prefill:
+      workload: {rate, duration, long_len, long_frac, gen_tokens}
+      sim:                       # virtual-clock study, 3 schedules
+        p99_itl_unchunked:       # paper-style whole-prompt admission
+        p99_itl_chunked:         # chunked run (the win CI asserts)
+        max_itl_unchunked / max_itl_chunked
+        max_chunk_latency:       # largest chunk run with decodes in
+                                 # flight (idle-pipeline chunks cover the
+                                 # whole remaining prompt by design and
+                                 # stall nothing — excluded)
+        stall_budget:            # prefill_stall_factor x max decode tick
+        p99_itl_deferring:       # PR-1 two-phase veto baseline ...
+        mean_latency_deferring / mean_latency_chunked
+                                 # ... which defers long prompts: its ITL
+                                 # is clean but long prompts starve — the
+                                 # queueing-latency column shows it
+        chunk_ticks / chunked_prefills   # pipeline stats, chunked run
+      real_engine:
+        token_for_token_equal:   # chunked vs unchunked generations
+        chunk_ticks / chunked_prefills / prefill_tokens
 """
 from __future__ import annotations
 
@@ -264,9 +289,137 @@ def bench_prefix_cache(payload: dict, dur: float,
     payload["prefix_cache"] = section
 
 
+def bench_chunked_prefill(payload: dict, dur: float) -> None:
+    """Decode-stall study on a mixed long/short-prompt workload.
+
+    Simulated, three schedules over the SAME arrival stream:
+
+    - *unchunked* — paper-style whole-prompt admission (stall veto
+      effectively off): a long prompt's prefill stalls every in-flight
+      decode for the full pass, which is exactly the P99/max
+      inter-token-latency blowup chunking removes;
+    - *chunked* — the same no-deferral regime, but long prompts advance
+      one budget-sized chunk per tick interleaved with decode;
+    - *deferring* — the PR-1 two-phase veto at the same stall budget: its
+      ITL is clean because long prompts simply wait for the decode batch
+      to drain — the cost shows up as queueing latency instead.
+
+    Real engine: one workload with a long prompt arriving mid-decode,
+    served chunked and unchunked — generations must be token-for-token
+    identical (chunking changes WHEN prefill work happens, never its
+    result)."""
+    from repro.core import SimConfig, Workload, simulate
+
+    stall_factor = 4.0
+    wl_kw = dict(rate=30, duration=dur, len_min=4, len_max=40, seed=0,
+                 gen_tokens=24, gen_min=8, long_len=640, long_frac=0.12)
+    wl = Workload(**wl_kw)
+    # whole-prompt admission: veto off (factor large enough for any
+    # prompt in the workload), no chunking — the paper's schedule
+    base = simulate(wl, TURBO_CM, SimConfig(
+        policy="dp", admission="continuous", prefill_stall_factor=1e9))
+    # chunked: same no-deferral admission; chunk size derived from the
+    # real stall budget
+    chunked = simulate(wl, TURBO_CM, SimConfig(
+        policy="dp", admission="continuous",
+        prefill_stall_factor=stall_factor, chunked_prefill=True,
+        kv_block_size=16))
+    # deferring veto at the same budget (PR-1 behavior)
+    defer = simulate(wl, TURBO_CM, SimConfig(
+        policy="dp", admission="continuous",
+        prefill_stall_factor=stall_factor))
+    for r in (base, chunked, defer):
+        assert len(r.responses) == r.offered, "every session must finish"
+    # every executed chunk fit the stall budget
+    budget = stall_factor * max(chunked.decode_latencies)
+    assert chunked.chunk_latencies and \
+        max(chunked.chunk_latencies) <= budget
+    p99_base = base.itl_percentile(0.99)
+    p99_chunk = chunked.itl_percentile(0.99)
+    assert p99_chunk < p99_base, \
+        f"chunked P99 ITL {p99_chunk} must beat whole-prompt {p99_base}"
+    assert max(chunked.itl_samples) < max(base.itl_samples)
+    section = {
+        "workload": {"rate": wl.rate, "duration": dur,
+                     "long_len": wl.long_len, "long_frac": wl.long_frac,
+                     "gen_tokens": wl.gen_tokens},
+        "sim": {
+            "p99_itl_unchunked": p99_base,
+            "p99_itl_chunked": p99_chunk,
+            "max_itl_unchunked": max(base.itl_samples),
+            "max_itl_chunked": max(chunked.itl_samples),
+            "max_chunk_latency": max(chunked.chunk_latencies),
+            "stall_budget": budget,
+            "p99_itl_deferring": defer.itl_percentile(0.99),
+            "mean_latency_deferring": defer.latency_stats()[0],
+            "mean_latency_chunked": chunked.latency_stats()[0],
+            "chunk_ticks": chunked.stats.chunk_ticks,
+            "chunked_prefills": chunked.stats.chunked_prefills,
+        },
+    }
+    emit("chunked_prefill_sim", 0.0,
+         f"p99_itl_{p99_base*1e3:.2f}to{p99_chunk*1e3:.2f}ms_"
+         f"max_{max(base.itl_samples)*1e3:.2f}to"
+         f"{max(chunked.itl_samples)*1e3:.2f}ms_"
+         f"chunks={chunked.stats.chunk_ticks}")
+
+    # ---- real engine: chunked vs unchunked, identical tokens ----
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+    from repro.runtime import BucketLadder, InferenceEngine
+    from repro.runtime.engine import ContinuousEngine
+    from repro.runtime.session import Session
+    from repro.core import ServingConfig, ServingSystem
+
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.key(0))
+    eng = InferenceEngine(cfg, params, ladder=BucketLadder(
+        seq_buckets=(32, 64), batch_buckets=(1, 2, 4)))
+    cm = AnalyticCostModel(flops_per_token=1e6, bytes_per_token=1e3,
+                           weight_bytes=1e6, overhead=1e-4)
+    long_prompt = [(i * 7) % 50 + 2 for i in range(40)]
+    specs = [([1, 2, 3], 10), (list(long_prompt), 6), ([9, 8, 7], 8)]
+    results = {}
+    outputs = {}
+    for mode, on in (("unchunked", False), ("chunked", True)):
+        ce = ContinuousEngine(eng, max_slots=4, cap_new=16,
+                              kv_layout="paged")
+        sys_ = ServingSystem(backend=ce, cost_model=cm,
+                             config=ServingConfig(
+                                 policy="dp", max_batch_size=4,
+                                 chunked_prefill=on,
+                                 prefill_chunk_tokens=16))
+        sessions = [Session(i, len(p), 0.0, prompt=list(p),
+                            max_new_tokens=m)
+                    for i, (p, m) in enumerate(specs)]
+        sys_.submit(sessions[0])
+        sys_.step()                      # prefill the short head ...
+        sys_.step()                      # ... and get it decoding
+        for s in sessions[1:]:
+            sys_.submit(s)               # long prompt lands mid-decode
+        sys_.drain()
+        outputs[mode] = [s.result for s in sessions]
+        results[mode] = {
+            "chunk_ticks": sys_.pipeline.stats.chunk_ticks,
+            "chunked_prefills": sys_.pipeline.stats.chunked_prefills,
+            "prefill_tokens": ce.prefill_tokens,
+        }
+        assert eng.kv_slab.live_bytes == 0
+        assert ce.block_table.used_blocks == 0
+    assert outputs["chunked"] == outputs["unchunked"], \
+        "chunked prefill must not change a single generated token"
+    assert results["chunked"]["chunked_prefills"] > 0
+    results["token_for_token_equal"] = True
+    emit("chunked_prefill_real_engine", 0.0,
+         f"chunks={results['chunked']['chunk_ticks']}_tokens_identical")
+    section["real_engine"] = results
+    payload["chunked_prefill"] = section
+
+
 def run(smoke: bool = False, prefix_mix: float = 0.75) -> dict:
     payload = {
-        "schema": "bench_serving/v2",
+        "schema": "bench_serving/v3",
         "mode": "smoke" if smoke else "full",
         "throughput": {},
         "kv_footprint": {},
@@ -389,6 +542,9 @@ def run(smoke: bool = False, prefix_mix: float = 0.75) -> dict:
 
     # ---- beyond-paper: prefix-sharing KV cache (sim + real engine) ----
     bench_prefix_cache(payload, dur, prefix_mix)
+
+    # ---- beyond-paper: chunked prefill decode-stall study ----
+    bench_chunked_prefill(payload, dur)
 
     # ---- beyond-paper: straggler mitigation + multi-replica scaling ----
     wl = Workload(rate=100, duration=dur, len_min=2, len_max=100, seed=1)

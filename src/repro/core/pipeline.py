@@ -14,6 +14,19 @@ batching, cf. the LLM-serving survey's iteration-level scheduling): each
 One-shot (classification) sessions finish at prefill, which makes the
 request-granularity system of the paper a special case of this loop.
 
+**Chunked prefill** (``PipelineConfig.chunked_prefill``) bounds the
+decode stall a long prompt imposes: instead of one monolithic prompt
+pass, an admitted long prompt becomes a *resumable* PREFILL that
+advances one decode-tick-sized chunk per tick (chunk cost budgeted to
+``prefill_stall_factor`` decode ticks by
+:func:`repro.core.cost_model.chunk_tokens_for_budget`), alternating
+with decode ticks so every in-flight sequence keeps emitting between
+chunks.  KV for the whole prompt is charged at admission (the chunks
+can then never starve mid-prompt); the session splices into the decode
+batch only after its final chunk.  The classic all-or-nothing two-phase
+veto is the degenerate single-chunk case — prompts that fit one chunk
+still go through the planned, veto-guarded batch path.
+
 The pipeline is execution-agnostic: a :class:`PipelineBackend` runs the
 work.  `repro.runtime.engine.ContinuousEngine` backs it with a live model
 and wall clock; `repro.core.simulator.VirtualBackend` backs it with a cost
@@ -27,7 +40,7 @@ import time
 from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence, Tuple
 
-from repro.core.cost_model import CostModel
+from repro.core.cost_model import CostModel, chunk_tokens_for_budget
 from repro.core.scheduler import (BatchPlan, dp_schedule, naive_schedule,
                                   nobatch_schedule)
 from repro.runtime.session import Session, SessionState
@@ -89,6 +102,40 @@ class PipelineBackend:
         """Raise ValueError for a session this backend can never serve
         (checked at submit time, before any state transition)."""
 
+    # -- chunked prefill (optional capability) ---------------------------
+    def supports_chunked_prefill(self) -> bool:
+        """Whether this backend implements the resumable chunk-prefill
+        primitives below.  The pipeline only engages chunking when both
+        the config asks for it and the backend can serve it."""
+        return False
+
+    def chunk_quantum(self) -> int:
+        """Progress granule for chunked prefill, in tokens.  Paged
+        backends return their KV block size so chunk seams land on block
+        boundaries and each distinct query offset is a reusable compiled
+        cell."""
+        return 16
+
+    def begin_prefill_chunks(self, session: Session) -> None:
+        """Admit ``session`` (already in PREFILL) for chunked prefill:
+        reserve its decode slot and its WHOLE prompt's KV up front —
+        ``session.prefilled_tokens`` may start above 0 when a prompt
+        prefix is served from a shared cache.  No model work happens
+        here; ``prefill_chunk`` does the passes."""
+        raise NotImplementedError
+
+    def prefill_chunk(self, session: Session, upto: int) -> None:
+        """Advance ``session``'s resumable prefill to prompt position
+        ``upto`` (one chunk), updating ``session.prefilled_tokens``.
+        When ``upto == session.seq_len`` this is the final chunk: the
+        backend must splice the session into the decode batch (DECODE)
+        or finish it (one-shot / instant EOS)."""
+        raise NotImplementedError
+
+    def abort_chunked(self, session: Session) -> None:
+        """Release everything ``begin_prefill_chunks``/``prefill_chunk``
+        hold for a session whose chunked prefill failed terminally."""
+
 
 @dataclass
 class PipelineConfig:
@@ -108,6 +155,14 @@ class PipelineConfig:
     # always admit while the decode batch is below this size (prefills
     # are cheap to amortize into an underfull decode batch)
     min_decode_batch: int = 1
+    # chunked prefill: mid-decode, a prompt longer than one chunk is
+    # admitted as a resumable PREFILL advancing one chunk per tick,
+    # alternating with decode ticks — its stall per decode token is one
+    # chunk's cost instead of the whole prompt's.  Chunk size is derived
+    # from prefill_stall_factor x the current decode tick cost unless
+    # prefill_chunk_tokens pins it explicitly.
+    chunked_prefill: bool = False
+    prefill_chunk_tokens: Optional[int] = None
 
 
 @dataclass
@@ -117,6 +172,8 @@ class PipelineStats:
     prefill_batches: int = 0
     admitted: int = 0
     deferred_prefills: int = 0          # two-phase regime said "keep decoding"
+    chunk_ticks: int = 0                # resumable-prefill chunk advances
+    chunked_prefills: int = 0           # sessions admitted via chunking
 
 
 class ServingPipeline:
@@ -132,8 +189,13 @@ class ServingPipeline:
         self.clock = clock
         self.queue: List[Session] = []          # QUEUED, arrival order
         self.live: List[Session] = []           # DECODE in flight
+        self.chunking: List[Session] = []       # resumable PREFILL, FIFO
         self.finished: List[Session] = []
         self.stats = PipelineStats()
+        # alternation flag: after a decode tick the next tick may advance
+        # a chunk; after a chunk tick decode runs again — so no decode
+        # token waits for more than one chunk of prefill work
+        self._chunk_turn = False
         # req-id composition of every executed prefill batch, in dispatch
         # order — lets tests assert real-vs-virtual scheduling equivalence
         self.batch_log: List[Tuple[int, ...]] = []
@@ -188,122 +250,291 @@ class ServingPipeline:
             out.append(s)
         return out
 
-    def _prefill_worthwhile(self, cand: List[Session]) -> bool:
-        """Two-phase cost regime: is admitting these prefills worth
-        stalling the in-flight decode batch?"""
+    def _decode_tick_cost(self, decoding: List[Session]) -> float:
+        ctx = sum(s.seq_len + s.tokens_emitted for s in decoding) \
+            / len(decoding)
+        return self.cost.decode_latency(len(decoding), int(ctx))
+
+    def _prefill_worthwhile(self, batch: List[Session]) -> bool:
+        """Two-phase cost regime: is dispatching THIS prefill batch worth
+        stalling the in-flight decode batch?  Charged against the batch
+        the planner actually composed — not the first-k queue estimate —
+        so the stall bound the veto enforces is the stall the dispatch
+        imposes."""
         decoding = self._decoding()
         if not decoding or len(decoding) < self.config.min_decode_batch:
             return True
-        k = min(len(cand), self.config.max_batch_size)
         stall = self.cost.prefill_latency(
-            max(s.seq_len for s in cand[:k]), k)
-        ctx = sum(s.seq_len + s.tokens_emitted for s in decoding) \
-            / len(decoding)
-        tick = self.cost.decode_latency(len(decoding), int(ctx))
-        return stall <= self.config.prefill_stall_factor * tick
+            max(s.seq_len for s in batch), len(batch))
+        return stall <= self.config.prefill_stall_factor * \
+            self._decode_tick_cost(decoding)
+
+    # -- chunked prefill -------------------------------------------------
+    def _chunk_enabled(self) -> bool:
+        return self.config.chunked_prefill and \
+            self.backend.supports_chunked_prefill()
+
+    def _chunk_tokens(self) -> int:
+        """Tokens the next prefill chunk may cover: a whole number of
+        backend quanta whose cost fits the decode-stall budget (see
+        cost_model.chunk_tokens_for_budget), or the explicit override."""
+        cfg = self.config
+        quantum = self.backend.chunk_quantum()
+        if cfg.prefill_chunk_tokens is not None:
+            return max(cfg.prefill_chunk_tokens, 1)
+        decoding = self._decoding()
+        cap = max((s.seq_len for s in self.queue + self.chunking),
+                  default=quantum)
+        if not decoding:
+            return max(cap, quantum)     # nothing to stall
+        budget = cfg.prefill_stall_factor * self._decode_tick_cost(decoding)
+        return chunk_tokens_for_budget(self.cost, budget, quantum,
+                                       max(cap, quantum))
+
+    def _admission_decision(self):
+        """What an admission round would do right now:
+        ``None`` (nothing to admit), ``"defer"`` (two-phase veto),
+        ``("chunk", session, None)`` (begin a resumable chunked prefill
+        for the queue head), or ``("plan", cand, plan)`` (dispatch
+        ``plan``'s batches over ``cand``; plan is None when the idle
+        path skipped the veto and the dispatcher should plan itself).
+        Pure — deterministic in pipeline state — so ``should_admit`` and
+        ``tick`` cannot disagree."""
+        if not self.queue:
+            return None
+        if self.config.admission == "drain" and (self.live or
+                                                 self.chunking):
+            return None
+        cand = self._admissible()
+        if not cand:
+            return None
+        if not self._trigger():
+            return None
+        decoding = self._decoding()
+        if not decoding or len(decoding) < self.config.min_decode_batch:
+            return ("plan", cand, None)
+        if self._chunk_enabled():
+            chunk = self._chunk_tokens()
+            if cand[0].seq_len > chunk:
+                # the queue head needs chunking: admit it alone into the
+                # resumable-prefill queue (its stall is then per-chunk)
+                return ("chunk", cand[0], None)
+            # plan only over prompts that fit one chunk; a long prompt
+            # mid-queue waits for its own chunked admission (FIFO)
+            short = []
+            for s in cand:
+                if s.seq_len > chunk:
+                    break
+                short.append(s)
+            cand = short
+        plan = plan_for_policy(
+            self.config.policy, [s.seq_len for s in cand], self.cost,
+            self.config.max_batch_size)
+        if not self._prefill_worthwhile(
+                [cand[i] for i in plan.batches[0]]):
+            return "defer"
+        return ("plan", cand, plan)
 
     def should_admit(self, record: bool = False) -> bool:
         """Pure query unless ``record`` (tick-internal): only real
         scheduling decisions count a deferral in the stats."""
-        if not self.queue:
-            return False
-        if self.config.admission == "drain" and self.live:
-            return False
-        cand = self._admissible()
-        if not cand:
-            return False
-        if not self._trigger():
-            return False
-        if not self._prefill_worthwhile(cand):
+        decision = self._admission_decision()
+        if decision == "defer":
             if record:
                 self.stats.deferred_prefills += 1
             return False
-        return True
+        return decision is not None
 
     # ------------------------------------------------------------------
     # The loop
     # ------------------------------------------------------------------
     def tick(self) -> List[Session]:
-        """One scheduler iteration: a prefill admission round OR one
-        decode step over every in-flight sequence.  Returns the sessions
-        that finished during this tick."""
+        """One scheduler iteration: a resumable-prefill chunk advance, a
+        prefill admission round, OR one decode step over every in-flight
+        sequence.  Returns the sessions that finished during this tick."""
         done: List[Session] = []
-        if self.should_admit(record=True):
-            cand = self._admissible()
-            plan = plan_for_policy(self.config.policy,
-                                   [s.seq_len for s in cand], self.cost,
-                                   self.config.max_batch_size)
-            batches = plan.batches
-            # with decodes in flight, dispatch ONE batch per tick: the
-            # two-phase veto bounded the stall of a single prefill pass,
-            # and the rest of the queue re-plans next tick, interleaved
-            # with decode progress (idle pipelines run the whole plan —
-            # the paper's batch-at-a-time behavior)
-            if self._decoding():
-                batches = batches[:1]
-            admitted = set()
-            for batch_idx in batches:
-                batch = [cand[i] for i in batch_idx]
-                padded = max(s.seq_len for s in batch)
+        decoding = self._decoding()
+        if self.chunking and (self._chunk_turn or not decoding):
+            # a chunk's turn: advance the oldest resumable prefill by one
+            # budget-sized chunk; the next tick goes back to decode
+            self._chunk_turn = False
+            self._advance_chunk(done)
+            self.stats.chunk_ticks += 1
+        else:
+            decision = self._admission_decision()
+            if decision == "defer":
+                self.stats.deferred_prefills += 1
+                decision = None
+            if decision is not None:
+                kind, payload, plan = decision
+                if kind == "chunk":
+                    self._begin_chunked(payload, done)
+                else:
+                    self._dispatch_prefills(payload, done, plan)
+            elif decoding:
+                self.backend.decode_tick(decoding)
                 now = self.clock()
-                for s in batch:
-                    s.start_prefill(now, batch_size=len(batch),
-                                    padded_len=padded)
-                try:
-                    self.backend.prefill_batch(batch, padded)
-                except Exception as exc:
-                    # fail this batch terminally and flush the tick's
-                    # bookkeeping so neither the failed batch nor the
-                    # already-admitted earlier batches wedge the queue
-                    for s in batch:
-                        if not s.is_finished:
-                            s.error = str(exc)
-                            s.finish(self.clock())
-                    admitted.update(id(s) for s in batch)
-                    done.extend(batch)
-                    self.queue = [s for s in self.queue
-                                  if id(s) not in admitted]
-                    self.finished.extend(done)
-                    raise
-                self.batch_log.append(tuple(s.req_id for s in batch))
-                self.stats.prefill_batches += 1
-                for s in batch:
-                    admitted.add(id(s))
-                    if s.is_finished:
-                        done.append(s)
-                    elif s.state is SessionState.DECODE:
-                        self.live.append(s)
-                    else:
-                        raise RuntimeError(
-                            f"backend left session {s.req_id} in "
-                            f"{s.state} after prefill")
-            self.queue = [s for s in self.queue if id(s) not in admitted]
-            self.stats.prefill_ticks += 1
-            self.stats.admitted += len(admitted)
-        elif self._decoding():
-            self.backend.decode_tick(self._decoding())
-            self.stats.decode_ticks += 1
+                for s in decoding:
+                    s.token_times.append(now)
+                self.stats.decode_ticks += 1
+                self._chunk_turn = True
         # unified sweep: collect everything that finished this tick —
         # decode completions AND sessions an out-of-band backend sync
         # (e.g. sync_every > 1) marked finished during a prefill tick
         done.extend(s for s in self.live if s.is_finished)
         self.live = [s for s in self.live if not s.is_finished]
+        for s in done:
+            # a row that hit EOS on device but synced late (sync_every >
+            # 1) stayed DECODE through ticks that emitted it nothing;
+            # drop those timestamps so ITL telemetry matches the tokens
+            # actually generated
+            del s.token_times[len(s.generated):]
         self.finished.extend(done)
         return done
 
+    def _dispatch_prefills(self, cand: List[Session], done: List[Session],
+                           plan: Optional[BatchPlan] = None) -> None:
+        """The classic admission round: plan over ``cand`` (reusing the
+        plan the veto already priced, when there is one), dispatch."""
+        if plan is None:
+            plan = plan_for_policy(self.config.policy,
+                                   [s.seq_len for s in cand], self.cost,
+                                   self.config.max_batch_size)
+        batches = plan.batches
+        # with decodes in flight, dispatch ONE batch per tick: the
+        # two-phase veto bounded the stall of a single prefill pass,
+        # and the rest of the queue re-plans next tick, interleaved
+        # with decode progress (idle pipelines run the whole plan —
+        # the paper's batch-at-a-time behavior)
+        if self._decoding():
+            batches = batches[:1]
+        admitted = set()
+        for batch_idx in batches:
+            batch = [cand[i] for i in batch_idx]
+            padded = max(s.seq_len for s in batch)
+            now = self.clock()
+            for s in batch:
+                s.start_prefill(now, batch_size=len(batch),
+                                padded_len=padded)
+            try:
+                self.backend.prefill_batch(batch, padded)
+            except Exception as exc:
+                # fail this batch terminally and flush the tick's
+                # bookkeeping so neither the failed batch nor the
+                # already-admitted earlier batches wedge the queue
+                for s in batch:
+                    if not s.is_finished:
+                        s.error = str(exc)
+                        s.finish(self.clock())
+                admitted.update(id(s) for s in batch)
+                done.extend(batch)
+                self.queue = [s for s in self.queue
+                              if id(s) not in admitted]
+                self.finished.extend(done)
+                raise
+            self.batch_log.append(tuple(s.req_id for s in batch))
+            self.stats.prefill_batches += 1
+            for s in batch:
+                admitted.add(id(s))
+                if s.is_finished:
+                    done.append(s)
+                elif s.state is SessionState.DECODE:
+                    self.live.append(s)
+                else:
+                    raise RuntimeError(
+                        f"backend left session {s.req_id} in "
+                        f"{s.state} after prefill")
+        self.queue = [s for s in self.queue if id(s) not in admitted]
+        self.stats.prefill_ticks += 1
+        self.stats.admitted += len(admitted)
+
+    def _begin_chunked(self, session: Session,
+                       done: List[Session]) -> None:
+        """Admit one long prompt as a resumable chunked prefill: charge
+        its whole-prompt KV and decode slot now, then run its first
+        chunk — so the admission tick does real prefill work."""
+        session.start_prefill(self.clock(), batch_size=1,
+                              padded_len=session.seq_len)
+        try:
+            self.backend.begin_prefill_chunks(session)
+        except Exception as exc:
+            if not session.is_finished:
+                session.error = str(exc)
+                session.finish(self.clock())
+            self.queue.remove(session)
+            done.append(session)
+            self.finished.append(session)
+            raise
+        self.queue.remove(session)
+        self.chunking.append(session)
+        self.batch_log.append((session.req_id,))
+        self.stats.prefill_batches += 1
+        self.stats.admitted += 1
+        self.stats.chunked_prefills += 1
+        self._advance_chunk(done)
+        self.stats.chunk_ticks += 1
+        # this tick DID chunk work: a pending chunk turn from an earlier
+        # decode tick is consumed, decode runs before the next chunk
+        self._chunk_turn = False
+
+    def _advance_chunk(self, done: List[Session]) -> None:
+        """One chunk of progress for the oldest resumable prefill; on
+        its final chunk the backend splices the session into decode and
+        it leaves the chunk queue."""
+        s = self.chunking[0]
+        upto = min(s.prefilled_tokens + self._chunk_tokens(), s.seq_len)
+        try:
+            self.backend.prefill_chunk(s, upto)
+        except Exception as exc:
+            if not s.is_finished:
+                s.error = str(exc)
+                s.finish(self.clock())
+            self.backend.abort_chunked(s)
+            self.chunking.remove(s)
+            done.append(s)
+            self.finished.append(s)
+            raise
+        if s.prefilled_tokens < s.seq_len:
+            return                       # mid-prompt; resume next turn
+        self.chunking.remove(s)
+        if s.is_finished:
+            done.append(s)
+        elif s.state is SessionState.DECODE:
+            self.live.append(s)
+        else:
+            raise RuntimeError(f"backend left session {s.req_id} in "
+                               f"{s.state} after its final chunk")
+
     def idle(self) -> bool:
-        return not self.queue and not self.live
+        return not self.queue and not self.live and not self.chunking
 
     def drain(self) -> List[Session]:
         """Tick until nothing is queued or in flight.  Breaks instead of
-        spinning when a hungry pipeline can make no further progress
-        (e.g. capacity-starved with nothing decoding)."""
+        spinning when the pipeline can make no further progress: if a
+        tick executed nothing (no prefill / chunk / decode, nothing
+        finished) and the clock did not move, the pipeline state is
+        bit-identical to before the tick — every future tick would
+        repeat it, so waiting cannot help.  Under a wall clock a lazy
+        pipeline's trigger eventually fires because the clock DOES move
+        between ticks; under a virtual clock (which only advances on
+        executed work) this is the guard that keeps a never-triggered
+        lazy queue from spinning forever."""
         out: List[Session] = []
         while not self.idle():
+            before = (self.stats.prefill_ticks, self.stats.decode_ticks,
+                      self.stats.chunk_ticks, self.clock())
             finished = self.tick()
             out.extend(finished)
-            if not finished and not self._decoding() \
-                    and self.config.strategy == "hungry" \
-                    and not self.should_admit():
+            if finished:
+                continue
+            after = (self.stats.prefill_ticks, self.stats.decode_ticks,
+                     self.stats.chunk_ticks, self.clock())
+            if after[:3] == before[:3] and (
+                    after[3] == before[3]
+                    or self.config.strategy == "hungry"):
+                # nothing executed; and either the clock is frozen (so
+                # nothing ever will) or the strategy is hungry (whose
+                # admission decision is time-independent — waiting on
+                # the wall clock cannot unblock it either)
                 break
         return out

@@ -182,8 +182,9 @@ class ServingSystem:
         return out
 
     def step(self) -> List[Response]:
-        """One scheduler tick: a prefill admission round (the whole plan)
-        or one decode step over the in-flight batch."""
+        """One scheduler tick: a prefill admission round (the whole
+        plan), one resumable-prefill chunk, or one decode step over the
+        in-flight batch."""
         return self._collect(self.pipeline.tick())
 
     def drain(self) -> List[Response]:

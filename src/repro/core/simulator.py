@@ -52,6 +52,12 @@ class Workload:
     # stream untouched (older seeds reproduce exactly).
     prefix_tokens: int = 0
     prefix_mix: float = 0.0
+    # long-prompt mix: with probability long_frac a request's prompt is
+    # ``long_len`` tokens instead of the U(len_min, len_max) draw — the
+    # mixed long/short workload whose decode stalls chunked prefill
+    # bounds.  long_len=0 leaves the rng stream untouched.
+    long_len: int = 0
+    long_frac: float = 0.0
 
     def generate_sessions(self) -> List[Session]:
         rng = random.Random(self.seed)
@@ -63,6 +69,8 @@ class Workload:
             if t > self.duration:
                 break
             base_len = rng.randint(self.len_min, self.len_max)
+            if self.long_len and rng.random() < self.long_frac:
+                base_len = self.long_len
             shared = 0
             if self.prefix_tokens and rng.random() < self.prefix_mix:
                 shared = self.prefix_tokens
@@ -104,6 +112,12 @@ class SimConfig:
     # blocks, mirroring the real engine's BlockTableManager
     kv_block_size: Optional[int] = None
     num_kv_blocks: Optional[int] = None
+    # chunked prefill (see PipelineConfig): long prompts advance one
+    # budget-sized chunk per tick instead of stalling the decode batch
+    # for a whole prompt pass; prefill_chunk_tokens pins the chunk size
+    # (None derives it from prefill_stall_factor x decode tick cost)
+    chunked_prefill: bool = False
+    prefill_chunk_tokens: Optional[int] = None
     # prefix-sharing model (mirrors the real engine's RadixPrefixCache
     # over a Workload prefix mix): once one member of a prefix cohort has
     # prefilled, later members are charged only their uncached suffix —
@@ -128,7 +142,9 @@ class SimConfig:
             policy=self.policy, strategy="hungry",
             max_batch_size=self.max_batch_size, admission=self.admission,
             prefill_stall_factor=self.prefill_stall_factor,
-            min_decode_batch=self.min_decode_batch)
+            min_decode_batch=self.min_decode_batch,
+            chunked_prefill=self.chunked_prefill,
+            prefill_chunk_tokens=self.prefill_chunk_tokens)
 
 
 class VirtualClock:
@@ -166,12 +182,21 @@ class VirtualBackend(PipelineBackend):
         self._prefix_resident: Dict[int, int] = {}
         self.prefix_hits = 0
         self.prefix_tokens_saved = 0
+        # chunked prefill: sessions mid-resumable-prefill (they hold a
+        # reserved decode slot + their whole prompt's KV), the modelled
+        # latency of every chunk executed while decodes were in flight
+        # (the stall-relevant ones), and of every decode tick — the
+        # stall-bound assertions in tests and benches read these
+        self._chunking: Dict[int, Session] = {}
+        self.chunk_latencies: List[float] = []
+        self.decode_latencies: List[float] = []
 
     # -- capacity ------------------------------------------------------
     def free_slots(self) -> Optional[int]:
         if self.config.max_decode_slots is None:
             return None
-        return self.config.max_decode_slots - len(self.decoding)
+        return self.config.max_decode_slots - len(self.decoding) \
+            - len(self._chunking)
 
     def free_kv_tokens(self) -> Optional[int]:
         cfg = self.config
@@ -289,8 +314,9 @@ class VirtualBackend(PipelineBackend):
     def decode_tick(self, sessions: List[Session]) -> None:
         b = len(sessions)
         ctx = sum(s.seq_len + s.tokens_emitted for s in sessions) / b
-        self.clock.advance(
-            self.service(self.cost.decode_latency(b, int(ctx))))
+        lat = self.service(self.cost.decode_latency(b, int(ctx)))
+        self.decode_latencies.append(lat)
+        self.clock.advance(lat)
         now = self.clock.now
         for s in sessions:
             s.generated.append(1)
@@ -301,6 +327,67 @@ class VirtualBackend(PipelineBackend):
         if self.config.kv_free == "batch":
             self._sweep_groups()
         self._sample_kv()
+
+    # -- chunked prefill -------------------------------------------------
+    def supports_chunked_prefill(self) -> bool:
+        return True
+
+    def chunk_quantum(self) -> int:
+        return self.config.kv_block_size or 16
+
+    def begin_prefill_chunks(self, s: Session) -> None:
+        """Charge the whole prompt's KV and a decode slot up front (the
+        real engine's block reservation); chunks then advance without
+        capacity risk.  A cached prefix skips straight past its tokens."""
+        cached = self._cached_for(s)
+        s.cached_tokens = cached
+        if cached:
+            self.prefix_hits += 1
+            self.prefix_tokens_saved += cached
+        s.prefilled_tokens = cached
+        self.kv_live[s.req_id] = s.total_len - cached
+        self._chunking[s.req_id] = s
+        self._sample_kv()
+
+    def prefill_chunk(self, s: Session, upto: int) -> None:
+        n = upto - s.prefilled_tokens
+        lat = self.service(self.cost.prefill_latency(max(n, 1), 1))
+        # stall telemetry covers chunks that actually had decodes to
+        # stall: with an empty decode batch the pipeline deliberately
+        # sizes the chunk to the whole remaining prompt (nothing waits),
+        # so recording it would fail the stall-budget bound for free
+        if self.decoding:
+            self.chunk_latencies.append(lat)
+        self.clock.advance(lat)
+        s.prefilled_tokens = upto
+        if upto < s.seq_len:
+            return
+        del self._chunking[s.req_id]
+        now = self.clock.now
+        if s.is_one_shot:
+            s.finish(now)
+            self.kv_live.pop(s.req_id, None)
+            self._sample_kv()
+            return
+        installed = 0
+        if self.config.prefix_cache and s.prefix_group is not None:
+            installed = self._install_prefix(s)
+        self.kv_live[s.req_id] = s.total_len - s.cached_tokens - installed
+        s.start_decode(now)
+        s.generated.append(1)        # first token comes from prefill
+        if s.stop_after(1):
+            s.finish(now)
+            self._on_finish(s)
+        else:
+            self.decoding.append(s)
+        if self.config.kv_free == "batch":
+            self._groups.append({s.req_id: s})
+            self._sweep_groups()
+        self._sample_kv()
+
+    def abort_chunked(self, s: Session) -> None:
+        self._chunking.pop(s.req_id, None)
+        self.kv_live.pop(s.req_id, None)
 
 
 @dataclass
@@ -316,6 +403,21 @@ class SimResult:
     # prefix-sharing telemetry (SimConfig.prefix_cache runs)
     prefix_hits: int = 0
     prefix_tokens_saved: int = 0
+    # decode-stall telemetry: per-session inter-token-latency samples
+    # (gaps between consecutive emission timestamps — a co-scheduled
+    # prefill's stall lands here), and the modelled latency of every
+    # prefill chunk / decode tick executed
+    itl_samples: List[float] = field(default_factory=list)
+    chunk_latencies: List[float] = field(default_factory=list)
+    decode_latencies: List[float] = field(default_factory=list)
+
+    def itl_percentile(self, q: float) -> float:
+        """Inter-token latency at quantile ``q`` (0 < q <= 1), e.g.
+        q=0.99 for the P99 decode stall; 0.0 when nothing decoded."""
+        if not self.itl_samples:
+            return 0.0
+        xs = sorted(self.itl_samples)
+        return xs[min(int(q * len(xs)), len(xs) - 1)]
 
     @property
     def throughput(self) -> float:
@@ -404,21 +506,29 @@ def simulate(workload: Workload, cost: CostModel,
     stats = PipelineStats()
     batch_log: List[Tuple[int, ...]] = []
     prefix_hits = prefix_saved = 0
+    itl: List[float] = []
+    chunk_lats: List[float] = []
+    decode_lats: List[float] = []
     for p in pipelines:
         for s in p.finished:
             responses.append(Response(s.req_id, s.arrival_time,
                                       s.finish_time, s.batch_size,
                                       s.padded_len))
+            itl.extend(s.inter_token_latencies())
         batch_log.extend(p.batch_log)
         prefix_hits += p.backend.prefix_hits
         prefix_saved += p.backend.prefix_tokens_saved
+        chunk_lats.extend(p.backend.chunk_latencies)
+        decode_lats.extend(p.backend.decode_latencies)
         for k in vars(stats):
             setattr(stats, k, getattr(stats, k) + getattr(p.stats, k))
     responses.sort(key=lambda r: (r.finish_time, r.req_id))
     return SimResult(responses, workload.duration, n,
                      kv_timeline=sorted(kv_timeline), batch_log=batch_log,
                      stats=stats, prefix_hits=prefix_hits,
-                     prefix_tokens_saved=prefix_saved)
+                     prefix_tokens_saved=prefix_saved, itl_samples=itl,
+                     chunk_latencies=chunk_lats,
+                     decode_latencies=decode_lats)
 
 
 def throughput_curve(rates: Sequence[float], cost: CostModel,

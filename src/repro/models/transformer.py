@@ -454,7 +454,9 @@ def prefill_suffix(cfg: ModelConfig, params: Params, tokens: jax.Array,
                    true_lengths: Optional[jax.Array] = None,
                    cache_dtype=jnp.bfloat16):
     """Resume a prompt pass after ``prefix_len`` cached tokens (the
-    prefix-sharing KV cache's suffix prefill).
+    prefix-sharing KV cache's suffix prefill, and the per-chunk pass of
+    chunked prefill — each chunk resumes at the previous chunk's seam,
+    with the prefix KV read back from the request's own paged blocks).
 
     ``tokens`` (B, S_suffix) holds the right-padded *uncached* remainder
     of each prompt; ``prefix_k``/``prefix_v`` (L, B, prefix_len, KV, dh)
@@ -463,7 +465,10 @@ def prefill_suffix(cfg: ModelConfig, params: Params, tokens: jax.Array,
     each layer attends over [prefix, suffix] with the causal mask
     continued across the seam, so the result is the same computation a
     full-prompt prefill would have done for the suffix positions — only
-    the prefix's quadratic work is skipped.
+    the prefix's quadratic work is skipped.  ``prefix_len == 0`` (the
+    first chunk of a cold prompt) degenerates to a plain prompt pass:
+    the empty prefix arrays are ignored rather than concatenated, so the
+    compiled HLO matches the cold path exactly.
 
     Returns ``(last-token logits, {"k", "v"})`` where k/v are the
     *suffix-only* cache parts (L, B, S_suffix, KV, dh): the caller
@@ -477,15 +482,19 @@ def prefill_suffix(cfg: ModelConfig, params: Params, tokens: jax.Array,
                          "state cannot restart mid-sequence")
     if cfg.num_codebooks:
         raise ValueError("suffix prefill does not support codebook models")
+    if prefix_len < 0:
+        raise ValueError(f"prefix_len must be >= 0, got {prefix_len}")
     bsz, seq = tokens.shape
     h = embed_inputs(cfg, params, tokens)
     positions = L.positions_for(cfg, (bsz, seq), 0, offset=prefix_len)
+    use_prefix = prefix_len > 0
 
     def block(carry, xs):
         h = carry
         blk, pk, pv = xs
         h, _, kv = _block_attn_full(cfg, rt, blk, h, positions, True,
-                                    prefix_kv=(pk, pv),
+                                    prefix_kv=(pk, pv) if use_prefix
+                                    else None,
                                     q_offset=prefix_len)
         return h, kv
 

@@ -572,12 +572,16 @@ class ContinuousEngine(PipelineBackend):
         # blocks a live request will still append (admission reserved
         # them, so mid-decode appends can never fail)
         self._reserved: Dict[int, int] = {}
+        # chunked prefills in flight: req_id -> the decode slot reserved
+        # for it at admission (claimed when the final chunk splices)
+        self._chunk_slots: Dict[int, int] = {}
         self._since_sync = 0
         self.decode_ticks = 0
 
     # -- PipelineBackend -------------------------------------------------
     def free_slots(self) -> int:
-        return sum(1 for s in self.sessions if s is None)
+        return sum(1 for s in self.sessions if s is None) \
+            - len(self._chunk_slots)
 
     def free_kv_tokens(self) -> Optional[int]:
         """Token capacity of blocks neither held nor reserved — the
@@ -668,7 +672,12 @@ class ContinuousEngine(PipelineBackend):
                              "(duplicate in-flight submission?)")
         need = eng.ladder.seq_bucket(max(s.total_len for s in sessions))
         self._ensure_state(need)
-        slots = [i for i, s in enumerate(self.sessions) if s is None]
+        # slots reserved for in-flight chunked prefills are NOT free: a
+        # final chunk will splice there, and a row spliced in meanwhile
+        # would be overwritten mid-decode
+        taken = set(self._chunk_slots.values())
+        slots = [i for i, s in enumerate(self.sessions)
+                 if s is None and i not in taken]
         slots = slots[:len(sessions)]
         assert len(slots) == len(sessions), "admitted beyond free slots"
         # prefix matching takes refcount holds on every matched block up
@@ -797,6 +806,198 @@ class ContinuousEngine(PipelineBackend):
         self._since_sync += 1
         if self._since_sync >= self.sync_every:
             self._sync()
+
+    # -- chunked prefill -------------------------------------------------
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked prefill scatters each chunk's KV into the request's
+        own pool blocks, so it needs the paged layout (the contiguous
+        slot cache has no per-request home for a half-built prompt)."""
+        return self.kv_layout == "paged"
+
+    def chunk_quantum(self) -> int:
+        return self.block_size
+
+    def begin_prefill_chunks(self, session: Session) -> None:
+        """Reserve everything the resumable prefill will need — a decode
+        slot and blocks/reservations covering the WHOLE prompt + first
+        decode write — before any chunk runs, so no chunk can fail on
+        capacity mid-prompt.  With the prefix cache on, the matched
+        prefix maps in here (tail copy-on-write included) and
+        ``session.prefilled_tokens`` starts at the cached length: the
+        chunks only cover the uncached remainder."""
+        if self.kv_layout != "paged":
+            raise ValueError("chunked prefill requires kv_layout='paged'")
+        eng = self.engine
+        if eng.kv_slab.has_region(session.req_id):
+            raise ValueError(f"req_id {session.req_id} already holds a "
+                             "KV region (duplicate in-flight submission?)")
+        need = eng.ladder.seq_bucket(session.total_len)
+        self._ensure_state(need)
+        taken = set(self._chunk_slots.values())
+        free = [i for i, s in enumerate(self.sessions)
+                if s is None and i not in taken]
+        assert free, "chunked admission beyond free slots"
+        slot = free[0]
+        btm = self.block_table
+        match: Optional[PrefixMatch] = None
+        cached = 0
+        if self.prefix_cache is not None:
+            match = self.prefix_cache.match(list(session.prompt))
+            cached = match.cached_tokens
+        covered = len(match.full_blocks) if match is not None else 0
+        want = btm.blocks_needed(session.total_len) - covered
+        deficit = want + sum(self._reserved.values()) - btm.free_blocks
+        if deficit > 0 and self.prefix_cache is not None:
+            deficit -= self.prefix_cache.evict(deficit)
+        if deficit > 0:
+            if match is not None:
+                self.prefix_cache.release(match)
+            raise ValueError(
+                f"chunked prefill needs {want} fresh KV blocks beyond "
+                f"reservations, pool has {btm.free_blocks} free — the "
+                "admission planner should have vetoed this session")
+        prefix_blocks: List[int] = []
+        if match is not None:
+            match.consumed = True    # holds transfer to the table below
+            prefix_blocks = list(match.full_blocks)
+            if match.tail_block is not None:
+                try:
+                    cow = btm.take(1)[0]
+                except BlockExhausted:
+                    for b in prefix_blocks:
+                        btm.unref(b)
+                    btm.unref(match.tail_block)
+                    raise
+                st = self.state
+                cache = dict(st.cache)
+                cache["k"] = cache["k"].at[:, cow].set(
+                    cache["k"][:, match.tail_block])
+                cache["v"] = cache["v"].at[:, cow].set(
+                    cache["v"][:, match.tail_block])
+                self.state = replace(st, cache=cache)
+                btm.unref(match.tail_block)
+                prefix_blocks.append(cow)
+                self.cow_blocks += 1
+        try:
+            bids = btm.allocate(session.req_id, max(cached, 1),
+                                prefix_blocks=prefix_blocks)
+        except BlockExhausted:
+            for b in prefix_blocks:
+                btm.unref(b)
+            raise
+        self._reserved[session.req_id] = max(
+            btm.blocks_needed(session.total_len) - len(bids), 0)
+        self._chunk_slots[session.req_id] = slot
+        per_tok = kv_bytes_per_token(eng.cfg)
+        eng.kv_slab.allocate(session.req_id,
+                             max(per_tok * session.total_len, 1),
+                             tokens=session.total_len)
+        session.cached_tokens = cached
+        session.prefilled_tokens = cached
+
+    def prefill_chunk(self, session: Session, upto: int) -> None:
+        """One resumable-prefill pass over prompt positions
+        ``[prefilled_tokens, upto)``: gather the already-built prefix KV
+        from the session's own blocks, run the suffix cell at that
+        offset (causal attention continued across the chunk seam), and
+        scatter the chunk's KV into the session's blocks.  The final
+        chunk (``upto == seq_len``) seeds the decode row from its
+        last-token logits and splices it into the reserved slot."""
+        eng = self.engine
+        req = session.req_id
+        off = session.prefilled_tokens
+        if req not in self._chunk_slots:
+            raise ValueError(f"session {req} has no chunked prefill in "
+                             "flight")
+        if not off < upto <= session.seq_len:
+            raise ValueError(f"chunk [{off}, {upto}) out of range for "
+                             f"prompt length {session.seq_len}")
+        btm = self.block_table
+        final = upto == session.seq_len
+        cover = min(session.seq_len + 1, session.total_len) if final \
+            else upto
+        fresh = btm.ensure(req, cover)
+        if fresh:
+            self._reserved[req] = max(self._reserved[req] - len(fresh), 0)
+        pk, pv = self._gather_own_prefix(req, off)
+        rows = eng.prefill_suffix_batch(
+            [list(session.prompt)[:upto]], prefix_k=pk, prefix_v=pv,
+            prefix_len=off, max_new_tokens=[session.max_new_tokens],
+            eos_id=[session.eos_id], cap_new=self.cap_new)
+        bids = btm.block_table(req)
+        bs = self.block_size
+        st = self.state
+        cache = dict(st.cache)
+        k_pool, v_pool = cache["k"], cache["v"]
+        pos = np.arange(off, upto)
+        fidx = jnp.asarray(
+            np.asarray(bids, np.int32)[pos // bs] * bs + pos % bs)
+        flat_shape = (k_pool.shape[0], k_pool.shape[1] * bs) + \
+            k_pool.shape[3:]
+        k_pool = k_pool.reshape(flat_shape).at[:, fidx].set(
+            rows.cache["k"][:, 0, :upto - off]).reshape(k_pool.shape)
+        v_pool = v_pool.reshape(flat_shape).at[:, fidx].set(
+            rows.cache["v"][:, 0, :upto - off]).reshape(v_pool.shape)
+        cache["k"], cache["v"] = k_pool, v_pool
+        self.state = replace(st, cache=cache)
+        session.prefilled_tokens = upto
+        self.prefill_tokens += upto - off
+        if not final:
+            return
+        # final chunk: claim the reserved slot and splice the control row
+        slot = self._chunk_slots.pop(req)
+        idx = jnp.asarray(np.array([slot], np.int32))
+        st = self.state
+        cache = dict(st.cache)
+        row = np.zeros((self.max_blocks,), np.int32)
+        row[:len(bids)] = bids
+        cache["block_tables"] = cache["block_tables"].at[slot].set(
+            jnp.asarray(row))
+        for key in _BATCH_AXIS0:
+            cache[key] = cache[key].at[idx].set(
+                _rows(rows.cache[key], key, 1))
+        self.state = self._spliced(cache, rows, idx, 1)
+        self.sessions[slot] = session
+        self._slot_len[slot] = session.seq_len
+        session.start_decode(self.clock(), slot=slot)
+        if self.prefix_cache is not None:
+            self._donate_prompts([session])
+        # a budget-1 or instant-EOS prompt may be done already
+        self._sync()
+
+    def abort_chunked(self, session: Session) -> None:
+        """Drop every hold a failed chunked prefill still has.  Its slot
+        was never claimed and its block-table row was never published, so
+        freeing the blocks is safe — no device row can write into them."""
+        req = session.req_id
+        if self.block_table is not None:
+            self.block_table.free(req)
+        self._reserved.pop(req, None)
+        self._chunk_slots.pop(req, None)
+        if self.engine.kv_slab.has_region(req):
+            self.engine.kv_slab.free(req)
+            self.engine.kv_slab.gc()
+
+    def _gather_own_prefix(self, req_id: int, length: int
+                           ) -> Tuple[jax.Array, jax.Array]:
+        """Prefix KV ``[0, length)`` gathered from the request's OWN
+        block table — the left side of a chunk seam (shape
+        (L, 1, length, KV, dh); length 0 yields empty arrays for the
+        first chunk of a cold prompt)."""
+        bs = self.block_size
+        nb = max(-(-length // bs), 1)
+        table = self.block_table.block_table(req_id)
+        ids = np.zeros((1, nb), np.int32)
+        ids[0, :min(len(table), nb)] = table[:nb]
+        idx = jnp.asarray(ids)
+
+        def gather(pool):
+            g = pool[:, idx]                 # (L, 1, nb, BS, kv, dh)
+            flat = (pool.shape[0], 1, nb * bs) + pool.shape[3:]
+            return g.reshape(flat)[:, :, :length]
+
+        return (gather(self.state.cache["k"]),
+                gather(self.state.cache["v"]))
 
     # -- internals -------------------------------------------------------
     def _ensure_state(self, need_len: int) -> None:

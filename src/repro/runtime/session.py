@@ -24,7 +24,11 @@ from typing import Any, List, Optional, Sequence
 
 class SessionState(enum.Enum):
     QUEUED = "queued"        # waiting in the admission queue
-    PREFILL = "prefill"      # prompt pass dispatched this tick
+    # PREFILL is *resumable*: under chunked prefill a session stays here
+    # across many ticks while ``prefilled_tokens`` walks up its prompt,
+    # one decode-tick-sized chunk at a time; the classic whole-prompt
+    # pass is the single-chunk special case.
+    PREFILL = "prefill"
     DECODE = "decode"        # holds a KV slot; advances one token per tick
     FINISHED = "finished"    # response ready, KV freed
 
@@ -73,6 +77,17 @@ class Session:
     prefill_time: Optional[float] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    # chunked-prefill progress: prompt tokens whose KV is already built.
+    # Stays 0 for whole-prompt prefills; under chunking it advances one
+    # chunk per PREFILL tick until it reaches seq_len (then the session
+    # splices into decode).  TTFT is first_token_time - arrival_time and
+    # is recorded at the first *generated* token — finishing the last
+    # chunk, not dispatching the first one.
+    prefilled_tokens: int = 0
+    # host-visible emission timestamps (first entry = the prefill's seed
+    # token, then one per decode tick); inter-token-latency telemetry for
+    # the serving benchmarks — diffs of this list are the ITL samples.
+    token_times: List[float] = field(default_factory=list)
     # simulator hook: synthetic EOS position (tokens emitted before stop);
     # None means the token budget is the only stop condition.
     eos_at: Optional[int] = None
@@ -125,6 +140,7 @@ class Session:
         self._to(SessionState.DECODE)
         self.slot = slot
         self.first_token_time = now
+        self.token_times.append(now)
 
     def finish(self, now: float, result: Any = None) -> None:
         self._to(SessionState.FINISHED)
@@ -161,6 +177,19 @@ class Session:
         if self.finish_time is None:
             return None
         return self.finish_time - self.arrival_time
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first generated token (None until decoding starts)."""
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    def inter_token_latencies(self) -> List[float]:
+        """Gaps between consecutive emission timestamps — the per-token
+        stall a co-scheduled prefill imposes shows up here."""
+        return [b - a for a, b in zip(self.token_times,
+                                      self.token_times[1:])]
 
     def stop_after(self, n_emitted: int, token: Optional[int] = None) -> bool:
         """Would the session stop after having emitted ``n_emitted`` tokens,

@@ -1,0 +1,389 @@
+"""Chunked prefill: resumable PREFILL interleaved with decode.
+
+Covers the chunk-budget sizing helper, the pipeline's chunk scheduling
+(bounded decode stall, alternation with decode ticks, parity between
+virtual-clock runs), the real engine's chunk primitive (token-for-token
+equality with the unchunked path, also under prefix sharing), and the
+drain()/veto bugfixes that ride along in this PR.
+"""
+import jax
+import pytest
+
+from repro.core import (AnalyticCostModel, ServingConfig, ServingSystem,
+                        SimConfig, VirtualClock, Workload, simulate)
+from repro.core.cost_model import chunk_tokens_for_budget
+from repro.core.pipeline import ServingPipeline
+from repro.core.simulator import VirtualBackend
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.runtime import BucketLadder, InferenceEngine
+from repro.runtime.engine import ContinuousEngine
+from repro.runtime.session import Session, SessionState
+
+CM = AnalyticCostModel(flops_per_token=1e6, bytes_per_token=1e3,
+                       weight_bytes=1e6, overhead=1e-4)
+# the smoke CM above is launch-overhead-dominated (prefill cost nearly
+# flat in tokens — long prompts stall nothing); stall/ITL tests need a
+# cost model where prompt length actually costs, like the calibrated
+# serving-bench model
+TURBO_CM = AnalyticCostModel(flops_per_token=2 * 110e6,
+                             bytes_per_token=2e4, weight_bytes=2.2e8,
+                             overhead=2.6e-3, peak_flops=6.5e12,
+                             hbm_bw=336e9)
+
+
+def _virtual_pipeline(config: SimConfig, cost=CM):
+    clock = VirtualClock()
+    backend = VirtualBackend(cost, clock, lambda t: t, config, {}, [])
+    return ServingPipeline(backend, cost,
+                           config.pipeline_config(), clock), clock
+
+
+# ---------------------------------------------------------------------------
+# Chunk-budget sizing (cost model)
+# ---------------------------------------------------------------------------
+
+def test_chunk_tokens_fit_stall_budget():
+    quantum = 16
+    for factor in (1.0, 4.0, 32.0):
+        budget = factor * CM.decode_latency(4, 80)
+        c = chunk_tokens_for_budget(CM, budget, quantum=quantum,
+                                    cap=4096)
+        assert c % quantum == 0 and c >= quantum
+        # the chosen chunk fits the budget unless even one quantum
+        # cannot (minimum-progress floor)
+        if c > quantum:
+            assert CM.prefill_latency(c, 1) <= budget
+        # and one more quantum would not fit (or the cap was hit)
+        if c + quantum <= 4096:
+            assert CM.prefill_latency(c + quantum, 1) > budget
+
+
+def test_chunk_tokens_monotone_in_budget():
+    tick = CM.decode_latency(2, 50)
+    cs = [chunk_tokens_for_budget(CM, f * tick, 16, 1 << 16)
+          for f in (1.0, 8.0, 64.0, 512.0)]
+    assert cs == sorted(cs)
+
+
+def test_chunk_tokens_rejects_bad_quantum():
+    with pytest.raises(ValueError, match="quantum"):
+        chunk_tokens_for_budget(CM, 4.0, 0, 100)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline scheduling (virtual clock)
+# ---------------------------------------------------------------------------
+
+def test_long_prompt_goes_through_chunk_queue():
+    cfg = SimConfig(policy="dp", chunked_prefill=True,
+                    prefill_chunk_tokens=16)
+    pipe, clock = _virtual_pipeline(cfg)
+    a = Session(0, 10, 0.0, max_new_tokens=8)
+    pipe.submit(a)
+    pipe.tick()                           # whole-plan prefill (idle)
+    assert a.state is SessionState.DECODE
+    b = Session(1, 100, 0.0, max_new_tokens=4)
+    pipe.submit(b)
+    pipe.tick()                           # chunked admission + 1st chunk
+    assert b.state is SessionState.PREFILL
+    assert b.prefilled_tokens == 16
+    assert pipe.stats.chunked_prefills == 1
+    assert pipe.chunking == [b]
+    # alternation: a decode tick runs between consecutive chunks
+    decode_before = pipe.stats.decode_ticks
+    pipe.tick()
+    assert pipe.stats.decode_ticks == decode_before + 1
+    assert b.prefilled_tokens == 16       # chunk waited its turn
+    pipe.tick()
+    assert b.prefilled_tokens == 32
+    pipe.drain()
+    assert a.is_finished and b.is_finished
+    assert b.tokens_emitted == 4
+    # TTFT was recorded at the first generated token (after the final
+    # chunk), not at the first chunk's dispatch
+    assert b.first_token_time > b.prefill_time
+    assert b.prefilled_tokens == b.seq_len
+
+
+def test_short_prompts_take_degenerate_single_chunk_path():
+    """Prompts that fit one chunk ride the classic planned/veto'd batch
+    path — chunking is the non-degenerate case only for long prompts."""
+    cfg = SimConfig(policy="dp", chunked_prefill=True,
+                    prefill_chunk_tokens=64)
+    pipe, _ = _virtual_pipeline(cfg)
+    pipe.submit(Session(0, 10, 0.0, max_new_tokens=8))
+    pipe.tick()
+    pipe.submit(Session(1, 20, 0.0, max_new_tokens=4))
+    pipe.tick()
+    assert pipe.stats.chunked_prefills == 0
+    assert pipe.stats.prefill_batches == 2
+    pipe.drain()
+    assert len(pipe.finished) == 2
+
+
+def test_chunked_sessions_reserve_decode_slots():
+    """A mid-chunking session holds a decode slot: admissions cannot
+    oversubscribe max_decode_slots while it is still prefilling."""
+    cfg = SimConfig(policy="dp", chunked_prefill=True,
+                    prefill_chunk_tokens=16, max_decode_slots=2)
+    pipe, _ = _virtual_pipeline(cfg)
+    pipe.submit(Session(0, 10, 0.0, max_new_tokens=16))
+    pipe.tick()
+    pipe.submit(Session(1, 100, 0.0, max_new_tokens=16))
+    pipe.tick()                          # chunked admission
+    assert pipe.chunking
+    for i in range(2, 6):
+        pipe.submit(Session(i, 5, 0.0, max_new_tokens=16))
+    pipe.tick()                          # admission round
+    assert len(pipe.live) + len(pipe.chunking) <= 2
+    pipe.drain()
+    assert len(pipe.finished) == 6
+
+
+def test_chunked_stall_bounded_and_itl_improves():
+    """Acceptance: on a mixed long/short workload no decode tick waits
+    for more than the chunk budget of prefill work, and tail ITL beats
+    whole-prompt admission."""
+    wl = Workload(rate=30, duration=4.0, len_min=4, len_max=40, seed=0,
+                  gen_tokens=24, gen_min=8, long_len=640, long_frac=0.12)
+    whole = simulate(wl, TURBO_CM, SimConfig(policy="dp",
+                                             prefill_stall_factor=1e9))
+    chunked = simulate(wl, TURBO_CM, SimConfig(policy="dp",
+                                               prefill_stall_factor=4.0,
+                                               chunked_prefill=True,
+                                               kv_block_size=16))
+    assert len(whole.responses) == whole.offered
+    assert len(chunked.responses) == chunked.offered
+    assert chunked.stats.chunked_prefills > 0
+    # every executed chunk fits the stall budget
+    budget = 4.0 * max(chunked.decode_latencies)
+    assert max(chunked.chunk_latencies) <= budget
+    # the long prompts' whole-prompt prefill dominated the unchunked
+    # tail; chunking removes it
+    assert max(chunked.itl_samples) < max(whole.itl_samples)
+    assert chunked.itl_percentile(0.99) <= whole.itl_percentile(0.99)
+    # same token counts either way (scheduling never changes results)
+    gen = {r.req_id for r in chunked.responses}
+    assert gen == {r.req_id for r in whole.responses}
+
+
+def test_chunked_virtual_runs_are_reproducible():
+    """batch_log/stats parity: two virtual-clock runs of the same
+    chunked config are identical — the scheduling decisions are pure
+    functions of pipeline state."""
+    wl = Workload(rate=40, duration=3.0, len_min=4, len_max=30, seed=2,
+                  gen_tokens=12, gen_min=4, long_len=300, long_frac=0.2)
+    cfg = SimConfig(policy="dp", prefill_stall_factor=8.0,
+                    chunked_prefill=True, kv_block_size=16)
+    a = simulate(wl, CM, cfg)
+    b = simulate(wl, CM, cfg)
+    assert a.batch_log == b.batch_log
+    assert vars(a.stats) == vars(b.stats)
+    assert [(r.req_id, round(r.finish_time, 12)) for r in a.responses] \
+        == [(r.req_id, round(r.finish_time, 12)) for r in b.responses]
+
+
+def test_chunked_one_shot_long_prompt_finishes_at_final_chunk():
+    cfg = SimConfig(policy="dp", chunked_prefill=True,
+                    prefill_chunk_tokens=16)
+    pipe, _ = _virtual_pipeline(cfg)
+    pipe.submit(Session(0, 8, 0.0, max_new_tokens=8))
+    pipe.tick()
+    one_shot = Session(1, 50, 0.0, max_new_tokens=0)
+    pipe.submit(one_shot)
+    pipe.drain()
+    assert one_shot.is_finished and one_shot.tokens_emitted == 0
+    assert pipe.stats.chunked_prefills == 1
+
+
+def test_chunk_failure_finishes_session_terminally():
+    cfg = SimConfig(policy="dp", chunked_prefill=True,
+                    prefill_chunk_tokens=16)
+    pipe, _ = _virtual_pipeline(cfg)
+    pipe.submit(Session(0, 8, 0.0, max_new_tokens=8))
+    pipe.tick()
+    bad = Session(1, 60, 0.0, max_new_tokens=4)
+    pipe.submit(bad)
+    backend = pipe.backend
+    orig = backend.prefill_chunk
+
+    def boom(s, upto):
+        raise RuntimeError("chunk died")
+
+    backend.prefill_chunk = boom
+    with pytest.raises(RuntimeError, match="chunk died"):
+        pipe.tick()
+    assert bad.is_finished and bad.error == "chunk died"
+    assert bad.req_id not in backend.kv_live
+    assert not pipe.chunking
+    backend.prefill_chunk = orig
+    pipe.drain()
+    assert all(s.is_finished for s in pipe.finished)
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regressions (satellites)
+# ---------------------------------------------------------------------------
+
+def test_drain_lazy_virtual_clock_terminates():
+    """Regression: a lazy pipeline under a frozen virtual clock used to
+    spin forever in drain() — its trigger never fires and the clock only
+    advances on executed work.  drain() must break instead."""
+    cfg = SimConfig(policy="dp")
+    pcfg = cfg.pipeline_config()
+    pcfg.strategy = "lazy"
+    pcfg.lazy_timeout = 1e9              # never fires on its own
+    clock = VirtualClock()
+    backend = VirtualBackend(CM, clock, lambda t: t, cfg, {}, [])
+    pipe = ServingPipeline(backend, CM, pcfg, clock)
+    pipe.submit(Session(0, 10, 0.0, max_new_tokens=4))
+    out = pipe.drain()                   # used to hang
+    assert out == []
+    assert not pipe.finished             # still queued, not dropped
+    assert len(pipe.queue) == 1
+
+
+def test_drain_lazy_still_flushes_when_triggered():
+    cfg = SimConfig(policy="dp")
+    pcfg = cfg.pipeline_config()
+    pcfg.strategy = "lazy"
+    pcfg.lazy_timeout = 0.5
+    clock = VirtualClock()
+    backend = VirtualBackend(CM, clock, lambda t: t, cfg, {}, [])
+    pipe = ServingPipeline(backend, CM, pcfg, clock)
+    pipe.submit(Session(0, 10, 0.0, max_new_tokens=4))
+    clock.advance(1.0)                   # past the lazy timeout
+    pipe.drain()
+    assert len(pipe.finished) == 1
+
+
+def test_two_phase_veto_charges_planned_batch():
+    """Regression: the stall veto must price the batch the DP planner
+    actually dispatches, not the first-k queue prefix.  Queue = one long
+    prompt then many short ones; the planner's first batch is the cheap
+    short group, which the budget admits — the old first-k estimate
+    (padded to the long prompt) wrongly deferred it."""
+    long_s = Session(0, 400, 0.0, max_new_tokens=8)
+    shorts = [Session(i, 4, 0.0, max_new_tokens=8) for i in range(1, 5)]
+    stall = TURBO_CM.prefill_latency(4, len(shorts))   # planned batch
+    old_estimate = TURBO_CM.prefill_latency(400, 5)    # first-k estimate
+    # one decoding session of context ~10
+    tick_cost = TURBO_CM.decode_latency(1, 10)
+    factor = 2 * stall / tick_cost
+    assert stall <= factor * tick_cost < old_estimate
+    cfg = SimConfig(policy="dp", prefill_stall_factor=factor)
+    pipe, _ = _virtual_pipeline(cfg, cost=TURBO_CM)
+    warm = Session(99, 6, 0.0, max_new_tokens=16)
+    pipe.submit(warm)
+    pipe.tick()                          # warm decodes
+    pipe.submit(long_s)
+    for s in shorts:
+        pipe.submit(s)
+    pipe.tick()                          # admission round
+    # the short batch was dispatched (not deferred behind the long head)
+    assert pipe.stats.deferred_prefills == 0
+    assert any(s.state is SessionState.DECODE for s in shorts)
+    pipe.drain()
+    assert all(s.is_finished for s in [warm, long_s] + shorts)
+
+
+# ---------------------------------------------------------------------------
+# Real engine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.key(0))
+    return InferenceEngine(cfg, params, ladder=BucketLadder(
+        seq_buckets=(32, 64), batch_buckets=(1, 2, 4)))
+
+
+def _serve(engine, chunked: bool, prefix_cache: bool = False):
+    long_prompt = [(i * 7) % 50 + 2 for i in range(40)]
+    specs = [([1, 2, 3], 10), (list(long_prompt), 6), ([9, 8, 7], 8)]
+    ce = ContinuousEngine(engine, max_slots=4, cap_new=16,
+                          kv_layout="paged", prefix_cache=prefix_cache)
+    sys_ = ServingSystem(backend=ce, cost_model=CM,
+                         config=ServingConfig(policy="dp",
+                                              max_batch_size=4,
+                                              chunked_prefill=chunked,
+                                              prefill_chunk_tokens=16))
+    sessions = [Session(i, len(p), 0.0, prompt=list(p), max_new_tokens=m)
+                for i, (p, m) in enumerate(specs)]
+    sys_.submit(sessions[0])
+    sys_.step()                          # prefill the short head
+    sys_.step()                          # it starts decoding
+    for s in sessions[1:]:
+        sys_.submit(s)                   # long prompt arrives mid-decode
+    sys_.drain()
+    assert all(s.is_finished for s in sessions)
+    assert engine.kv_slab.live_bytes == 0
+    if prefix_cache:
+        residue = ce.block_table.used_blocks
+        assert residue == ce.prefix_cache.cached_blocks
+        assert ce.prefix_cache.evict(residue) == residue
+    assert ce.block_table.used_blocks == 0
+    assert not ce._chunk_slots and not ce._reserved
+    return [s.result for s in sessions], sys_.pipeline.stats, sessions
+
+
+def test_real_engine_chunked_tokens_identical(engine):
+    """Acceptance: chunked prefill changes WHEN prompt passes run, never
+    the generated tokens."""
+    base, base_stats, _ = _serve(engine, chunked=False)
+    chunked, stats, sessions = _serve(engine, chunked=True)
+    assert chunked == base
+    assert stats.chunked_prefills == 1 and stats.chunk_ticks >= 3
+    assert base_stats.chunked_prefills == 0
+    # the long prompt's result equals its isolated generation too
+    long_prompt = [(i * 7) % 50 + 2 for i in range(40)]
+    assert chunked[1] == engine.generate([long_prompt],
+                                         max_new_tokens=6)[0]
+    # it only spliced into decode after its final chunk
+    s = sessions[1]
+    assert s.prefilled_tokens == s.seq_len
+
+
+def test_real_engine_chunked_decode_advances_between_chunks(engine):
+    """The short session keeps emitting while the long prompt's chunks
+    run: its emitted-token count grows across the chunk window."""
+    _, stats, sessions = _serve(engine, chunked=True)
+    short = sessions[0]
+    # decode ticks happened interleaved with the 3 chunks — the short
+    # session finished with its full budget despite the long admission
+    assert short.tokens_emitted == 10
+    assert stats.decode_ticks > 0 and stats.chunk_ticks >= 3
+
+
+def test_real_engine_chunked_composes_with_prefix_cache(engine):
+    """Chunked prefill over a warm prefix cache: the resumable prefill
+    starts AFTER the cached prefix (copy-on-write tail included) and
+    tokens still match the cold unchunked run."""
+    cold, _, _ = _serve(engine, chunked=False, prefix_cache=False)
+    ce = ContinuousEngine(engine, max_slots=4, cap_new=16,
+                          kv_layout="paged", prefix_cache=True)
+    sys_ = ServingSystem(backend=ce, cost_model=CM,
+                         config=ServingConfig(policy="dp",
+                                              max_batch_size=4,
+                                              chunked_prefill=True,
+                                              prefill_chunk_tokens=16))
+    long_prompt = [(i * 7) % 50 + 2 for i in range(40)]
+    warm = Session(90, 40, 0.0, prompt=list(long_prompt),
+                   max_new_tokens=2)
+    sys_.submit(warm)
+    sys_.drain()                         # makes the prefix resident
+    short = Session(0, 3, 0.0, prompt=[1, 2, 3], max_new_tokens=10)
+    sys_.submit(short)
+    sys_.step()
+    sys_.step()
+    hit = Session(1, 40, 0.0, prompt=list(long_prompt), max_new_tokens=6)
+    sys_.submit(hit)
+    sys_.drain()
+    assert hit.is_finished and short.is_finished
+    assert hit.result == cold[1]         # same tokens as cold unchunked
+    assert hit.cached_tokens > 0         # served partly from the cache
+    # the resumable prefill only covered the uncached remainder
+    assert hit.prefilled_tokens == hit.seq_len
+    assert engine.kv_slab.live_bytes == 0

@@ -1,0 +1,114 @@
+"""Property test: pipeline conservation.
+
+Whatever the capacities, chunk sizes, strategies, and backend failures,
+every submitted session must end in FINISHED exactly once, no session
+may be both live and finished, and the backend must hold no KV for
+finished work once the pipeline drains.  This is the invariant that
+makes iteration-level scheduling safe to refactor: requests can be
+deferred, chunked, vetoed, or failed — never duplicated or lost.
+"""
+import random
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import AnalyticCostModel, SimConfig, VirtualClock
+from repro.core.pipeline import ServingPipeline
+from repro.core.simulator import VirtualBackend
+from repro.runtime.session import Session, SessionState
+
+CM = AnalyticCostModel(flops_per_token=1e6, bytes_per_token=1e3,
+                       weight_bytes=1e6, overhead=1e-4)
+
+
+class FailingBackend(VirtualBackend):
+    """VirtualBackend whose prefill paths fail on a seeded schedule —
+    modelling device-side prefill errors the pipeline must absorb
+    without wedging the queue or double-finishing sessions."""
+
+    def __init__(self, *args, fail_rng: random.Random, fail_p: float,
+                 **kw) -> None:
+        super().__init__(*args, **kw)
+        self.fail_rng = fail_rng
+        self.fail_p = fail_p
+
+    def _maybe_fail(self, what: str) -> None:
+        if self.fail_rng.random() < self.fail_p:
+            raise RuntimeError(f"injected {what} failure")
+
+    def prefill_batch(self, sessions, padded_len):
+        self._maybe_fail("prefill")
+        super().prefill_batch(sessions, padded_len)
+
+    def prefill_chunk(self, session, upto):
+        self._maybe_fail("chunk")
+        super().prefill_chunk(session, upto)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_sessions=st.integers(1, 25),
+    strategy=st.sampled_from(["hungry", "lazy"]),
+    policy=st.sampled_from(["dp", "naive", "nobatch"]),
+    max_slots=st.one_of(st.none(), st.integers(1, 4)),
+    chunked=st.booleans(),
+    chunk_tokens=st.one_of(st.none(), st.integers(4, 64)),
+    stall_factor=st.sampled_from([0.0, 4.0, 1e9]),
+    fail_p=st.sampled_from([0.0, 0.15]),
+    seed=st.integers(0, 10_000),
+)
+def test_pipeline_conserves_sessions(n_sessions, strategy, policy,
+                                     max_slots, chunked, chunk_tokens,
+                                     stall_factor, fail_p, seed):
+    rng = random.Random(seed)
+    cfg = SimConfig(policy=policy, max_decode_slots=max_slots,
+                    prefill_stall_factor=stall_factor,
+                    chunked_prefill=chunked,
+                    prefill_chunk_tokens=chunk_tokens,
+                    kv_block_size=rng.choice([None, 8, 16]))
+    pcfg = cfg.pipeline_config()
+    pcfg.strategy = strategy
+    pcfg.lazy_timeout = 1e-3
+    clock = VirtualClock()
+    backend = FailingBackend(CM, clock, lambda t: t, cfg, {}, [],
+                             fail_rng=random.Random(seed + 1),
+                             fail_p=fail_p)
+    pipe = ServingPipeline(backend, CM, pcfg, clock)
+    sessions = [
+        Session(i, rng.randint(1, 200), arrival_time=0.0,
+                max_new_tokens=rng.choice([0, 1, 4, 16]),
+                eos_at=rng.choice([None, 1, 3]))
+        for i in range(n_sessions)
+    ]
+    for s in sessions:
+        pipe.submit(s)
+    # drive to completion, absorbing injected failures like a serving
+    # loop would (log and keep ticking); bound the tick count so a
+    # livelock fails the test instead of hanging it
+    for _ in range(20_000):
+        if pipe.idle():
+            break
+        # lazy triggers need wall time; the virtual clock only moves on
+        # executed work, so nudge it (models a polling serving loop)
+        if strategy == "lazy":
+            clock.advance(5e-4)
+        try:
+            pipe.tick()
+        except RuntimeError as exc:
+            assert "injected" in str(exc)
+    assert pipe.idle(), "pipeline failed to drain within the tick bound"
+
+    # conservation: every session finished exactly once, none lost
+    assert len(pipe.finished) == n_sessions
+    assert {id(s) for s in pipe.finished} == {id(s) for s in sessions}
+    assert all(s.state is SessionState.FINISHED for s in sessions)
+    assert not pipe.live and not pipe.chunking and not pipe.queue
+    # no session is simultaneously tracked as live and finished, and
+    # the backend dropped every KV charge except resident prefix pools
+    assert not backend.decoding and not backend._chunking
+    assert all(rid < 0 for rid in backend.kv_live), backend.kv_live
+    # a failed session carries its error; a served one its tokens; the
+    # emission-timestamp telemetry matches the tokens actually generated
+    for s in sessions:
+        if s.error is None and s.max_new_tokens:
+            assert s.tokens_emitted >= 1
+        assert len(s.token_times) == len(s.generated)
