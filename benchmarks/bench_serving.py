@@ -25,8 +25,24 @@ Every run writes a machine-readable trajectory to ``BENCH_serving.json``
 the file schema valid on every push; the paper-claim assertions only run
 at full scale.
 
-``BENCH_serving.json`` schema (``bench_serving/v3``), ``chunked_prefill``
-section::
+``BENCH_serving.json`` schema (``bench_serving/v4``).  ``streaming``
+section (real engine through the `repro.api` client)::
+
+    streaming:
+      requests / new_tokens:     # workload size
+      ttft_ms: {mean, max}       # time-to-first-token measured at the
+                                 # CLIENT HANDLE (submit -> first token
+                                 # delivery), not inside the engine
+      itl_ms: {p50, p99, max}    # client-side inter-token gaps
+      greedy_new_tokens_per_s:   # all-greedy streaming run
+      sampled_new_tokens_per_s:  # same prompts, temperature=0.8,
+                                 # per-request seeds
+      sampled_vs_greedy_ratio:   # throughput delta of the sampling tick
+      greedy_stream_matches_engine:  # streamed greedy tokens ==
+                                 # engine.generate (bit-identical)
+      sampled_reproducible:      # same seeds -> same streams, rerun
+
+``chunked_prefill`` section::
 
     chunked_prefill:
       workload: {rate, duration, long_len, long_frac, gen_tokens}
@@ -417,9 +433,92 @@ def bench_chunked_prefill(payload: dict, dur: float) -> None:
     payload["chunked_prefill"] = section
 
 
+def bench_streaming(payload: dict) -> None:
+    """Client-handle streaming telemetry through the `repro.api` front
+    door: TTFT and inter-token latency are measured where a user would
+    measure them — at the RequestHandle, from submit to token delivery —
+    and the cost of the per-row sampling tick shows up as the
+    sampled-vs-greedy throughput ratio over identical prompts."""
+    import statistics
+
+    import jax
+    from repro.api import GenerationParams, TurboClient
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+    from repro.runtime import BucketLadder, InferenceEngine
+    from repro.runtime.engine import ContinuousEngine
+
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.key(0))
+    eng = InferenceEngine(cfg, params, ladder=BucketLadder(
+        seq_buckets=(32, 64), batch_buckets=(1, 2, 4)))
+    cm = AnalyticCostModel(flops_per_token=1e6, bytes_per_token=1e3,
+                           weight_bytes=1e6, overhead=1e-4)
+    prompts = [[(3 * i + j) % 50 + 1 for j in range(3 + i % 4)]
+               for i in range(6)]
+    budget = 12
+
+    def serve(samplers):
+        client = TurboClient(
+            ContinuousEngine(eng, max_slots=4, cap_new=16),
+            cost_model=cm)
+        t0 = time.perf_counter()
+        handles = [client.submit(p, g) for p, g in zip(prompts, samplers)]
+        streams = [list(h.stream()) for h in handles]
+        elapsed = time.perf_counter() - t0
+        return handles, streams, elapsed
+
+    greedy_params = [GenerationParams(max_new_tokens=budget)
+                     for _ in prompts]
+    sampled_params = [GenerationParams(max_new_tokens=budget,
+                                       temperature=0.8, top_p=0.95,
+                                       seed=i)
+                      for i in range(len(prompts))]
+    g_handles, g_streams, g_elapsed = serve(greedy_params)
+    s_handles, s_streams, s_elapsed = serve(sampled_params)
+    _, s_streams2, _ = serve(sampled_params)      # reproducibility
+
+    # greedy streams are the classic engine loop, token for token
+    matches = all(
+        st == eng.generate([p], max_new_tokens=budget)[0][len(p):]
+        for p, st in zip(prompts, g_streams))
+    n_tokens = sum(len(s) for s in g_streams)
+    ttfts = [h.ttft for h in g_handles if h.ttft is not None]
+    itls = sorted(d for h in g_handles
+                  for d in h.inter_token_latencies())
+    ratio = (sum(len(s) for s in s_streams) / s_elapsed) / \
+        (n_tokens / g_elapsed)
+    section = {
+        "requests": len(prompts),
+        "new_tokens": n_tokens,
+        "ttft_ms": {"mean": statistics.mean(ttfts) * 1e3,
+                    "max": max(ttfts) * 1e3},
+        # nearest-rank percentiles (ceil(q*n)-1); with few samples p99
+        # legitimately coincides with max
+        "itl_ms": {"p50": itls[max(-(-50 * len(itls) // 100) - 1, 0)]
+                   * 1e3,
+                   "p99": itls[max(-(-99 * len(itls) // 100) - 1, 0)]
+                   * 1e3,
+                   "max": itls[-1] * 1e3},
+        "greedy_new_tokens_per_s": n_tokens / g_elapsed,
+        "sampled_new_tokens_per_s":
+            sum(len(s) for s in s_streams) / s_elapsed,
+        "sampled_vs_greedy_ratio": ratio,
+        "greedy_stream_matches_engine": matches,
+        "sampled_reproducible": s_streams == s_streams2,
+    }
+    assert matches, "greedy streams must be bit-identical to the engine"
+    assert s_streams == s_streams2, "seeded sampling must reproduce"
+    emit("streaming_client", g_elapsed,
+         f"ttft_{section['ttft_ms']['mean']:.1f}ms_"
+         f"itl_p50_{section['itl_ms']['p50']*1e3:.2f}us_"
+         f"sampled_ratio_{ratio:.2f}")
+    payload["streaming"] = section
+
+
 def run(smoke: bool = False, prefix_mix: float = 0.75) -> dict:
     payload = {
-        "schema": "bench_serving/v3",
+        "schema": "bench_serving/v4",
         "mode": "smoke" if smoke else "full",
         "throughput": {},
         "kv_footprint": {},
@@ -545,6 +644,9 @@ def run(smoke: bool = False, prefix_mix: float = 0.75) -> dict:
 
     # ---- beyond-paper: chunked prefill decode-stall study ----
     bench_chunked_prefill(payload, dur)
+
+    # ---- beyond-paper: streaming client API (repro.api handles) ----
+    bench_streaming(payload)
 
     # ---- beyond-paper: straggler mitigation + multi-replica scaling ----
     wl = Workload(rate=100, duration=dur, len_min=2, len_max=100, seed=1)

@@ -136,6 +136,22 @@ def main() -> None:
     assert stats["hits"] >= len(followers)
     assert hot_cost < cold_cost * len(followers)
 
+    # ---- phase 4: "a few lines of code" (paper §5), via repro.api ----
+    print("\nstreaming client API: submit / stream / cancel in a few "
+          "lines of repro.api")
+    from repro.api import GenerationParams, TurboClient
+    client = TurboClient.from_arch("internlm2-1.8b",
+                                   seq_buckets=(32, 64),
+                                   batch_buckets=(1, 2, 4))
+    handle = client.submit([3, 1, 4, 1, 5], GenerationParams(
+        max_new_tokens=8, temperature=0.7, top_p=0.95, seed=42))
+    print("  sampled stream:", list(handle.stream()))
+    doomed = client.submit([2, 7, 1, 8], GenerationParams(
+        max_new_tokens=32))
+    doomed.cancel()
+    print(f"  cancelled second request in state {doomed.state}; "
+          f"greedy result: {client.submit([2, 7, 1, 8]).result()}")
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,42 @@
+"""Streaming client API — the few-lines-of-code way into the serving
+stack (paper §5's "seamlessly integrated into your code").
+
+Quickstart::
+
+    from repro.api import GenerationParams, TurboClient
+
+    client = TurboClient.from_arch("internlm2-1.8b")   # smoke-sized
+    handle = client.submit(
+        [1, 2, 3, 4],
+        GenerationParams(max_new_tokens=16,            # per-request
+                         temperature=0.8, top_p=0.95,  # sampling knobs
+                         seed=7))                      # reproducible
+    for token in handle.stream():                      # tokens as they
+        print(token)                                   # ... land
+    full = handle.result()                             # prompt + gen
+
+Everything is per request: ``GenerationParams`` carries the budget,
+temperature / top-k / top-p, the PRNG seed (token ``i`` is always drawn
+with ``fold_in(key(seed), i)``, so a request reproduces its stream no
+matter what it was batched with), and ``stop`` / ``eos`` ids.
+``temperature=0`` (the default) is greedy decoding, bit-identical to
+the classic engine loop.
+
+Handles do the driving — there is no scheduler loop to run:
+
+- ``handle.result()``  blocks until the request finishes;
+- ``handle.stream()``  yields tokens as decode ticks land;
+- ``handle.cancel()``  tears the request down in ANY state — queued,
+  mid-chunked-prefill (releasing the reserved slot and KV blocks), or
+  mid-decode (freeing KV, dropping shared-prefix holds) — and the
+  partial generation stays on the handle.
+
+The same API runs over the virtual-clock simulator
+(``TurboClient.simulated()``) for scheduling/parity tests, over an
+existing ``ContinuousEngine`` (``TurboClient(backend)``), and
+`repro.core.serving.ServingSystem` is itself a thin wrapper over this
+client.
+"""
+from repro.api.client import GenerationParams, RequestHandle, TurboClient
+
+__all__ = ["GenerationParams", "RequestHandle", "TurboClient"]

@@ -136,6 +136,18 @@ class PipelineBackend:
         """Release everything ``begin_prefill_chunks``/``prefill_chunk``
         hold for a session whose chunked prefill failed terminally."""
 
+    # -- cancellation (optional capability) ------------------------------
+    def cancel_session(self, session: Session) -> None:
+        """Tear down a mid-DECODE session immediately: free its KV
+        (blocks, slab region, reservations), release its decode slot,
+        and neutralize any device-resident row.  QUEUED cancellation
+        needs no backend work and mid-chunked-prefill cancellation goes
+        through :meth:`abort_chunked`; only backends with a decode phase
+        must implement this."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support mid-decode "
+            "cancellation")
+
 
 @dataclass
 class PipelineConfig:
@@ -174,6 +186,7 @@ class PipelineStats:
     deferred_prefills: int = 0          # two-phase regime said "keep decoding"
     chunk_ticks: int = 0                # resumable-prefill chunk advances
     chunked_prefills: int = 0           # sessions admitted via chunking
+    cancelled: int = 0                  # sessions torn down by cancel()
 
 
 class ServingPipeline:
@@ -192,6 +205,14 @@ class ServingPipeline:
         self.chunking: List[Session] = []       # resumable PREFILL, FIFO
         self.finished: List[Session] = []
         self.stats = PipelineStats()
+        # token-emission callback (session, fresh_tokens): invoked after
+        # every tick for each session whose host-visible generation grew
+        # — the `repro.api` streaming handles hang off this.  Real-engine
+        # sessions publish incrementally only when `session.stream` is
+        # set; otherwise the whole generation arrives in one call at
+        # finish time.
+        self.on_token: Optional[
+            Callable[[Session, List[int]], None]] = None
         # alternation flag: after a decode tick the next tick may advance
         # a chunk; after a chunk tick decode runs again — so no decode
         # token waits for more than one chunk of prefill work
@@ -209,6 +230,38 @@ class ServingPipeline:
                              f"{session.state}")
         self.backend.validate(session)
         self.queue.append(session)
+
+    def cancel(self, session: Session) -> bool:
+        """Tear down ``session`` in whatever state it is in — QUEUED
+        (drop from the admission queue), resumable PREFILL (release the
+        chunked prefill's reserved slot + blocks via the backend), or
+        DECODE (free KV / slot / shared-prefix holds via the backend).
+        Tokens generated before the cancel stay on the session as a
+        partial result.  Returns False when the session is already
+        FINISHED (nothing to do), True when it was cancelled here."""
+        if session.is_finished:
+            return False
+        if session in self.queue:
+            self.queue.remove(session)
+        elif session in self.chunking:
+            self.backend.abort_chunked(session)
+            self.chunking.remove(session)
+        elif session in self.live:
+            if session.state is SessionState.DECODE:
+                self.backend.cancel_session(session)
+            self.live.remove(session)
+        else:
+            raise ValueError(f"session {session.req_id} is not owned by "
+                             "this pipeline")
+        session.cancel(self.clock())
+        # same telemetry trim as the tick path: a row that finished on
+        # device between host syncs accumulated timestamps for ticks
+        # that emitted it nothing
+        del session.token_times[len(session.generated):]
+        self.stats.cancelled += 1
+        self.finished.append(session)
+        self._deliver_tokens([session])
+        return True
 
     def _decoding(self) -> List[Session]:
         return [s for s in self.live if s.state is SessionState.DECODE]
@@ -390,7 +443,22 @@ class ServingPipeline:
             # actually generated
             del s.token_times[len(s.generated):]
         self.finished.extend(done)
+        self._deliver_tokens(done)
         return done
+
+    def _deliver_tokens(self, done: List[Session]) -> None:
+        """Hand every freshly host-visible token to the emission
+        callback, in generation order.  ``session.streamed`` is the
+        delivery high-water mark, so a session is never handed the same
+        token twice regardless of how the backend batches its host
+        syncs."""
+        if self.on_token is None:
+            return
+        for s in self.live + done:
+            fresh = s.generated[s.streamed:]
+            if fresh:
+                s.streamed = len(s.generated)
+                self.on_token(s, list(fresh))
 
     def _dispatch_prefills(self, cand: List[Session], done: List[Session],
                            plan: Optional[BatchPlan] = None) -> None:

@@ -1,17 +1,22 @@
 """Serving framework (paper §5): admission queue, response cache, batch
 scheduler triggering (hungry/lazy), SLO guard.
 
-Since the iteration-level refactor, :class:`ServingSystem` is a thin
-wall-clock front-end over the shared scheduler loop in
-`repro.core.pipeline` — the same loop the virtual-clock simulator drives.
+Since the streaming-API redesign, :class:`ServingSystem` is a thin
+wall-clock wrapper over `repro.api.client.TurboClient` — the handle-based
+submit/stream/cancel front-end that owns the shared scheduler loop
+(`repro.core.pipeline`, the same loop the virtual-clock simulator
+drives).  ServingSystem adds what the client deliberately leaves out:
+the Clipper-style :class:`ResponseCache` and the batch-level
+:class:`Response` record keeping the paper's benchmarks comparable.
 Two execution styles are supported:
 
 - one-shot (classification): construct with ``execute(batch, padded_len)
   -> results``, exactly as before; requests finish at prefill;
 - generative continuous batching: construct with ``backend=`` an engine
   backend (e.g. `repro.runtime.engine.ContinuousEngine`) and submit
-  sessions with a ``max_new_tokens`` budget; new arrivals join the next
-  decode tick without waiting for in-flight generations to drain.
+  sessions with a ``max_new_tokens`` budget (plus per-request sampling
+  params); new arrivals join the next decode tick without waiting for
+  in-flight generations to drain.
 """
 from __future__ import annotations
 
@@ -23,7 +28,7 @@ from typing import Any, Callable, List, Optional, Sequence
 
 from repro.core.cost_model import CostModel
 from repro.core.pipeline import (PipelineBackend, PipelineConfig,
-                                 ServingPipeline, plan_for_policy)
+                                 plan_for_policy)
 from repro.runtime.session import Session
 
 __all__ = ["Request", "Response", "ResponseCache", "ServingConfig",
@@ -38,6 +43,9 @@ class Request:
     payload: Any = None               # e.g. token ids
 
     def cache_key(self) -> str:
+        """One-shot identity: the payload IS the request (generative
+        sessions key on prompt + every generation param — see
+        `repro.runtime.session.Session.cache_key`)."""
         h = hashlib.sha1(repr(self.payload).encode()).hexdigest()
         return f"{self.seq_len}:{h}"
 
@@ -115,7 +123,10 @@ class ServingSystem:
     """Real-time serving loop over a live engine.
 
     ``clock()`` returns the current time (wall clock by default; tests and
-    the simulator swap in virtual clocks).
+    the simulator swap in virtual clocks).  The scheduler loop itself is
+    owned by an embedded :class:`repro.api.client.TurboClient`
+    (``auto_pump=False`` — ServingSystem drives the ticks), so handles
+    obtained from ``self.client`` interoperate with ``step()``/``drain()``.
     """
 
     def __init__(self,
@@ -130,13 +141,20 @@ class ServingSystem:
         if cost_model is None:
             raise ValueError("cost_model is required (admission planning "
                              "and the two-phase regime depend on it)")
+        # deferred import: repro.api.client sits on repro.core.pipeline /
+        # cost_model, and importing it at module scope would close an
+        # import cycle through repro.core.__init__ when repro.api loads
+        # first
+        from repro.api.client import TurboClient
         self.config = config if config is not None else ServingConfig()
         self.clock = clock
         if backend is None:
             backend = CallableBackend(execute, clock)
         self.backend = backend
-        self.pipeline = ServingPipeline(backend, cost_model, self.config,
-                                        clock)
+        self.client = TurboClient(backend, cost_model=cost_model,
+                                  config=self.config, clock=clock,
+                                  auto_pump=False)
+        self.pipeline = self.client.pipeline
         self.cache = ResponseCache(self.config.cache_capacity)
         self.responses: List[Response] = []
 
@@ -154,7 +172,12 @@ class ServingSystem:
         return Session.from_request(req)
 
     def submit(self, req) -> Optional[Response]:
-        """Accepts a Request (one-shot) or a Session (generative)."""
+        """Accepts a Request (one-shot) or a Session (generative).
+        Returns the Response immediately on a cache hit, else None (the
+        response arrives from a later ``step()``/``drain()``).  The
+        cache key covers the FULL request identity — prompt, budget,
+        eos/stop, and every sampling param — so two same-prompt requests
+        with different generation params never collide."""
         session = self._as_session(req)
         if self.config.enable_cache:
             cached = self.cache.get(session.cache_key())
@@ -164,7 +187,7 @@ class ServingSystem:
                                 cached=True)
                 self.responses.append(resp)
                 return resp
-        self.pipeline.submit(session)
+        self.client.submit_session(session)
         return None
 
     def _collect(self, finished: Sequence[Session]) -> List[Response]:
@@ -176,7 +199,10 @@ class ServingSystem:
             resp = Response(s.req_id, s.arrival_time, s.finish_time,
                             s.batch_size, s.padded_len, result)
             out.append(resp)
-            if self.config.enable_cache:
+            # never memoize a cancelled or failed session: its partial /
+            # missing result is not the answer to the request's key
+            if self.config.enable_cache and s.error is None \
+                    and not s.cancelled:
                 self.cache.put(s.cache_key(), result)
         self.responses.extend(out)
         return out
@@ -189,3 +215,12 @@ class ServingSystem:
 
     def drain(self) -> List[Response]:
         return self._collect(self.pipeline.drain())
+
+    def cancel(self, session: Session) -> bool:
+        """Cancel a submitted session in any state (queued, resumable
+        prefill, mid-decode); every block/slot it held is released and
+        its (partial) response is collected immediately."""
+        if not self.pipeline.cancel(session):
+            return False
+        self._collect([session])
+        return True

@@ -388,6 +388,17 @@ class VirtualBackend(PipelineBackend):
     def abort_chunked(self, s: Session) -> None:
         self._chunking.pop(s.req_id, None)
         self.kv_live.pop(s.req_id, None)
+        self._sample_kv()
+
+    # -- cancellation ----------------------------------------------------
+    def cancel_session(self, s: Session) -> None:
+        """Mid-decode cancel under the virtual clock: drop the decode
+        slot and the session's KV charge immediately (no time passes —
+        cancellation is host bookkeeping, not device work)."""
+        if s in self.decoding:
+            self.decoding.remove(s)
+        self.kv_live.pop(s.req_id, None)
+        self._sample_kv()
 
 
 @dataclass

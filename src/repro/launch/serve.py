@@ -1,12 +1,20 @@
 """Serving driver: the full TurboTransformers pipeline over a real engine.
 
-Request stream (Poisson arrivals, uniform lengths) -> iteration-level
-serving pipeline -> batch scheduler (nobatch | naive | dp) ->
-InferenceEngine (bucketed, compiled-cell cache) -> responses. The cached_cost table is built by the
-engine's warm-up phase (paper §5).
+Two phases, both built on the `repro.api` streaming client:
+
+1. one-shot classification replay (the paper's workload): Poisson
+   request stream -> iteration-level serving pipeline -> batch scheduler
+   (nobatch | naive | dp) -> InferenceEngine (bucketed, compiled-cell
+   cache) -> responses, with the cached_cost table built by the engine's
+   warm-up phase (paper §5);
+2. generative streaming: `TurboClient.submit(prompt, GenerationParams)`
+   handles with per-request budgets / temperatures / seeds, tokens
+   consumed from `handle.stream()` as decode ticks land, plus one
+   mid-decode `handle.cancel()`.
 
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
-      --smoke --policy dp --num-requests 64 --len-max 100
+      --policy dp --num-requests 64 --len-max 100 [--no-smoke] \
+      [--temperature 0.8]
 """
 from __future__ import annotations
 
@@ -16,18 +24,23 @@ import time
 
 import jax
 
+from repro.api import GenerationParams, TurboClient
 from repro.configs import get_config, get_smoke_config
 from repro.core import (BucketedCostModel, Request, ServingConfig,
                         ServingSystem)
 from repro.data import LengthDistribution, RequestGenerator
 from repro.models import init_params
-from repro.runtime import BucketLadder, InferenceEngine
+from repro.runtime import BucketLadder, ContinuousEngine, InferenceEngine
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
-    ap.add_argument("--smoke", action="store_true", default=True)
+    # BooleanOptionalAction gives --smoke AND --no-smoke; the old
+    # action="store_true", default=True made full scale unreachable
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="reduced config (default; --no-smoke for full)")
     ap.add_argument("--policy", default="dp",
                     choices=["nobatch", "naive", "dp"])
     ap.add_argument("--strategy", default="hungry",
@@ -38,7 +51,19 @@ def main() -> None:
     ap.add_argument("--len-max", type=int, default=100)
     ap.add_argument("--max-batch", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    # generative streaming phase (repro.api)
+    ap.add_argument("--gen-requests", type=int, default=6,
+                    help="streaming requests in the generative phase")
+    ap.add_argument("--max-new-tokens", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples with per-request seeds")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(
         args.arch)
@@ -80,6 +105,36 @@ def main() -> None:
     print(f"batches executed with sizes: "
           f"{sorted(set(r.batch_size for r in system.responses))}; "
           f"engine compiled {engine.compile_count} cells")
+
+    # ---- generative streaming over the repro.api client --------------
+    print(f"\nstreaming: {args.gen_requests} generative requests through "
+          f"TurboClient (temperature={args.temperature})")
+    client = TurboClient(
+        ContinuousEngine(engine, max_slots=8,
+                         cap_new=max(args.max_new_tokens, 1)),
+        cost_model=cost)
+    gp = [GenerationParams(max_new_tokens=args.max_new_tokens,
+                           temperature=args.temperature,
+                           top_k=args.top_k, top_p=args.top_p, seed=i)
+          for i in range(args.gen_requests)]
+    prompts = [[(7 * i + j) % cfg.vocab_size for j in range(4 + i % 5)]
+               for i in range(args.gen_requests)]
+    handles = [client.submit(p, g) for p, g in zip(prompts, gp)]
+    victim = handles.pop() if len(handles) > 1 else None
+    if victim is not None:
+        it = victim.stream()
+        next(it, None)                    # let it reach mid-decode ...
+        victim.cancel()                   # ... then tear it down
+        print(f"  req {victim.req_id}: cancelled mid-decode after "
+              f"{len(victim.tokens())} token(s) (blocks released)")
+    for h in handles:
+        toks = list(h.stream())
+        print(f"  req {h.req_id}: streamed {len(toks)} tokens, "
+              f"ttft={1e3*(h.ttft or 0):.1f}ms")
+    itls = [d for h in handles for d in h.inter_token_latencies()]
+    if itls:
+        print(f"  client-side ITL p50={statistics.median(itls)*1e3:.1f}ms "
+              f"max={max(itls)*1e3:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -4,11 +4,12 @@ Attribute access is lazy (PEP 562): `repro.core.pipeline` imports the
 dependency-free `repro.runtime.session` at import time, and eagerly
 importing the engine here would close a cycle back through `repro.core`.
 """
-from repro.runtime.session import Session, SessionState
+from repro.runtime.session import (GenerationParams, Session,
+                                   SessionState)
 
 __all__ = ["BlockTableManager", "BucketLadder", "ContinuousEngine",
-           "InferenceEngine", "KVSlabManager", "PrefixMatch",
-           "RadixPrefixCache", "Session", "SessionState",
+           "GenerationParams", "InferenceEngine", "KVSlabManager",
+           "PrefixMatch", "RadixPrefixCache", "Session", "SessionState",
            "kv_bytes_per_token", "ssm_state_bytes"]
 
 _LAZY = {

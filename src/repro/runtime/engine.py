@@ -44,11 +44,17 @@ from repro.runtime.kv_cache import (DEFAULT_KV_BLOCK, BlockExhausted,
                                     BlockTableManager, KVSlabManager,
                                     kv_bytes_per_token, ssm_state_bytes)
 from repro.runtime.prefix_cache import PrefixMatch, RadixPrefixCache
-from repro.runtime.session import Session
+from repro.runtime.sampling import sample_tokens
+from repro.runtime.session import GenerationParams, Session
 
 # cache pytree leaves whose batch axis is 0 (everything else batches on
 # axis 1: k/v/conv/state are (L, B, ...), shared_k/v are (n_apps, B, ...))
 _BATCH_AXIS0 = ("len", "pos_offset")
+
+# stop-id slots per row in GenState.eos: column 0 is the request's eos_id,
+# the rest hold extra GenerationParams.stop ids (-1 = unused).  Fixed so
+# freshly prefilled rows always splice into the persistent slot cache.
+STOP_SLOTS = 4
 
 
 @dataclass
@@ -57,7 +63,8 @@ class GenState:
 
     Everything needed to advance decoding one token per tick without
     touching the host: the KV cache, the last sampled token per row, the
-    emitted-token accumulation buffer, and per-row stop bookkeeping.
+    emitted-token accumulation buffer, and per-row stop bookkeeping plus
+    sampling params (temperature / top-k / top-p / PRNG seed).
     """
     cache: Dict[str, jax.Array]
     cur: jax.Array                    # (B,) or (B,K) last sampled token
@@ -65,7 +72,14 @@ class GenState:
     counts: jax.Array                 # (B,) number emitted
     done: jax.Array                   # (B,) bool
     budget: jax.Array                 # (B,) per-row max_new_tokens
-    eos: jax.Array                    # (B,) eos id or -1
+    eos: jax.Array                    # (B, STOP_SLOTS) stop ids, -1 unused
+    temp: jax.Array                   # (B,) temperature (0 = greedy)
+    top_k: jax.Array                  # (B,) top-k cutoff (0 = off)
+    top_p: jax.Array                  # (B,) nucleus mass (1 = off)
+    seed: jax.Array                   # (B,) per-request PRNG seed
+    # host-side: does any live row sample?  Greedy-only batches compile
+    # and run the exact pre-sampling tick (bit-identical streams).
+    sampling: bool = False
 
     @property
     def capacity(self) -> int:
@@ -132,21 +146,32 @@ class InferenceEngine:
             self.compile_count += 1
         return self._decode_cache[key]
 
-    def _tick_fn(self, tok_ndim: int) -> Callable:
-        """Fused decode tick: one decode step + greedy sample + device-
+    def _tick_fn(self, tok_ndim: int, sampling: bool) -> Callable:
+        """Fused decode tick: one decode step + token selection + device-
         side emission + stop-flag update.  No host transfer anywhere —
-        the whole generation loop runs on device until a flush."""
-        key = ("tick", tok_ndim)
+        the whole generation loop runs on device until a flush.
+
+        Two compiled variants per token rank: ``sampling=False`` is the
+        pure-greedy tick (argmax only — the pre-sampling fast path);
+        ``sampling=True`` adds per-row categorical sampling, with greedy
+        (temperature 0) rows still taking the identical argmax value.
+        Codebook models (tok_ndim 2) are always greedy."""
+        key = ("tick", tok_ndim, sampling)
         if key not in self._decode_cache:
             cfg, rt = self.cfg, self.rt
 
             @partial(jax.jit, donate_argnums=(1, 2, 3, 4, 5))
             def tick(params, cache, cur, emitted, counts, done, budget,
-                     eos):
+                     eos, temp, top_k, top_p, seed):
                 prev_len = cache["len"]
                 logits, cache2 = decode_step(cfg, params, cache, cur,
                                              rt=rt)
-                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                if sampling and tok_ndim == 1:
+                    nxt = sample_tokens(logits, temperature=temp,
+                                        top_k=top_k, top_p=top_p,
+                                        seed=seed, step=counts)
+                else:
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 tok = nxt if nxt.ndim == 1 else nxt[:, 0]
                 # finished rows are frozen: no KV advance, no emission
                 cache2["len"] = jnp.where(done, prev_len, cache2["len"])
@@ -155,7 +180,8 @@ class InferenceEngine:
                         e, t[None], (c,)))(emitted, tok, counts)
                 emitted2 = jnp.where(done[:, None], emitted, written)
                 counts2 = jnp.where(done, counts, counts + 1)
-                done2 = done | (counts2 >= budget) | (tok == eos)
+                done2 = done | (counts2 >= budget) | \
+                    jnp.any(tok[:, None] == eos, axis=-1)
                 mask = done if cur.ndim == 1 else done[:, None]
                 cur2 = jnp.where(mask, cur, nxt)
                 return cache2, cur2, emitted2, counts2, done2
@@ -244,14 +270,18 @@ class InferenceEngine:
                       max_len: int,
                       max_new_tokens,
                       eos_id=None,
-                      cap_new: Optional[int] = None) -> GenState:
+                      cap_new: Optional[int] = None,
+                      sampling: Optional[
+                          Sequence[GenerationParams]] = None) -> GenState:
         """Prompt pass producing a device-resident :class:`GenState` that
         :meth:`decode_step_batch` advances one token per call.
 
         ``max_new_tokens`` / ``eos_id`` may be scalars or per-request
-        sequences.  The KV cache is sized to ``max_len`` so states built
-        against the same ``max_len`` are row-compatible (the continuous
-        engine splices them into its slot cache).
+        sequences.  ``sampling`` (optional, per request) carries each
+        row's temperature / top-k / top-p / seed / extra stop ids; None
+        is classic greedy.  The KV cache is sized to ``max_len`` so
+        states built against the same ``max_len`` are row-compatible
+        (the continuous engine splices them into its slot cache).
         """
         cfg = self.cfg
         n = len(token_lists)
@@ -282,33 +312,72 @@ class InferenceEngine:
         logits, cache = self._prefill_fn(max_len, batch_b, prompt_b)(
             self.params, jnp.asarray(toks), jnp.asarray(true_lens))
         return self._finish_gen_state(logits, cache, n, batch_b, budgets,
-                                      eos_ids, cap)
+                                      eos_ids, cap, sampling)
 
     def _finish_gen_state(self, logits, cache, n: int, batch_b: int,
                           budgets: Sequence[int], eos_ids: Sequence,
-                          cap: int) -> GenState:
+                          cap: int,
+                          sampling: Optional[
+                              Sequence[GenerationParams]] = None
+                          ) -> GenState:
         """Shared tail of the prefill paths: seed the per-row control
-        state (first sampled token, emission buffer, budget/eos/done)
-        around an already-populated cache pytree."""
-        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        state (first token — sampled with each row's params at step 0 —
+        emission buffer, budget/stops/done) around an already-populated
+        cache pytree."""
+        specs = list(sampling) if sampling is not None else []
+        specs += [GenerationParams(max_new_tokens=0)] * (batch_b -
+                                                         len(specs))
+        over = [i for i, p in enumerate(specs)
+                if len(p.stop) > STOP_SLOTS - 1]
+        if over:
+            raise ValueError(f"rows {over}: at most {STOP_SLOTS - 1} "
+                             "extra stop ids per request")
+        temp = jnp.asarray(np.array([p.temperature for p in specs],
+                                    np.float32))
+        top_k = jnp.asarray(np.array([p.top_k for p in specs], np.int32))
+        top_p = jnp.asarray(np.array([p.top_p for p in specs],
+                                     np.float32))
+        seed = jnp.asarray(np.array([p.seed for p in specs], np.int32))
+        stops = np.full((batch_b, STOP_SLOTS), -1, np.int32)
+        for i, e in enumerate(eos_ids):
+            if e is not None:
+                stops[i, 0] = e
+        for i, p in enumerate(specs):
+            for j, t in enumerate(p.stop):
+                stops[i, 1 + j] = t
+        eos = jnp.asarray(stops)
+        use_sampling = any(p.temperature > 0 for p in specs)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if use_sampling and greedy.ndim != 1:
+            raise ValueError("temperature sampling is unsupported for "
+                             "codebook models (greedy only)")
+        if use_sampling:
+            # first generated token: drawn at step 0 with the row's key
+            cur = sample_tokens(
+                logits, temperature=temp, top_k=top_k, top_p=top_p,
+                seed=seed, step=jnp.zeros((batch_b,), jnp.int32))
+        else:
+            cur = greedy
         tok0 = cur if cur.ndim == 1 else cur[:, 0]
         budget = jnp.asarray(np.array(
             list(budgets) + [0] * (batch_b - n), np.int32))
-        eos = jnp.asarray(np.array(
-            [(-1 if e is None else e) for e in eos_ids] +
-            [-1] * (batch_b - n), np.int32))
         emitted = jnp.zeros((batch_b, cap), jnp.int32)
         emitted = emitted.at[:, 0].set(tok0)
         counts = jnp.minimum(jnp.ones((batch_b,), jnp.int32), budget)
-        done = (counts >= budget) | ((tok0 == eos) & (counts > 0))
-        return GenState(cache, cur, emitted, counts, done, budget, eos)
+        done = (counts >= budget) | \
+            (jnp.any(tok0[:, None] == eos, axis=-1) & (counts > 0))
+        return GenState(cache, cur, emitted, counts, done, budget, eos,
+                        temp, top_k, top_p, seed, sampling=use_sampling)
 
     def prefill_suffix_batch(self, token_lists: Sequence[Sequence[int]], *,
                              prefix_k: jax.Array, prefix_v: jax.Array,
                              prefix_len: int,
                              max_new_tokens,
                              eos_id=None,
-                             cap_new: Optional[int] = None) -> GenState:
+                             cap_new: Optional[int] = None,
+                             sampling: Optional[
+                                 Sequence[GenerationParams]] = None
+                             ) -> GenState:
         """Resumable suffix prefill: like :meth:`prefill_batch`, but the
         first ``prefix_len`` tokens of every prompt are served from
         ``prefix_k``/``prefix_v`` (shared-prefix KV gathered from the
@@ -363,15 +432,18 @@ class InferenceEngine:
             "v": parts["v"],
         }
         return self._finish_gen_state(logits, cache, n, batch_b, budgets,
-                                      eos_ids, cap)
+                                      eos_ids, cap, sampling)
 
     def decode_step_batch(self, state: GenState) -> GenState:
         """One decode tick for every live row of ``state`` — entirely on
-        device; finished rows are frozen."""
-        tick = self._tick_fn(state.cur.ndim)
+        device; finished rows are frozen.  Greedy-only states run the
+        pure-argmax tick; states with sampled rows run the per-row
+        categorical variant (greedy rows still take the argmax value)."""
+        tick = self._tick_fn(state.cur.ndim, state.sampling)
         cache, cur, emitted, counts, done = tick(
             self.params, state.cache, state.cur, state.emitted,
-            state.counts, state.done, state.budget, state.eos)
+            state.counts, state.done, state.budget, state.eos,
+            state.temp, state.top_k, state.top_p, state.seed)
         return replace(state, cache=cache, cur=cur, emitted=emitted,
                        counts=counts, done=done)
 
@@ -625,6 +697,16 @@ class ContinuousEngine(PipelineBackend):
             raise ValueError(
                 f"session {session.req_id}: max_new_tokens="
                 f"{session.max_new_tokens} exceeds cap_new={self.cap_new}")
+        if session.temperature < 0:
+            raise ValueError(f"session {session.req_id}: temperature "
+                             "must be >= 0")
+        if not 0.0 < session.top_p <= 1.0:
+            raise ValueError(f"session {session.req_id}: top_p must be "
+                             "in (0, 1]")
+        if len(session.stop) > STOP_SLOTS - 1:
+            raise ValueError(
+                f"session {session.req_id}: at most {STOP_SLOTS - 1} "
+                f"extra stop ids (got {len(session.stop)})")
         if self.engine.kv_slab.has_region(session.req_id):
             raise ValueError(f"session {session.req_id}: req_id already "
                              "in flight")
@@ -739,7 +821,8 @@ class ContinuousEngine(PipelineBackend):
                         max_new_tokens=[s.max_new_tokens
                                         for s in part_sessions],
                         eos_id=[s.eos_id for s in part_sessions],
-                        cap_new=self.cap_new)
+                        cap_new=self.cap_new,
+                        sampling=[s.params for s in part_sessions])
                 else:
                     prefill_len = need if self.kv_layout == "paged" \
                         else self.max_len
@@ -749,7 +832,8 @@ class ContinuousEngine(PipelineBackend):
                         max_new_tokens=[s.max_new_tokens
                                         for s in part_sessions],
                         eos_id=[s.eos_id for s in part_sessions],
-                        cap_new=self.cap_new)
+                        cap_new=self.cap_new,
+                        sampling=[s.params for s in part_sessions])
                 if self.kv_layout == "paged":
                     self._splice_paged(rows, part_slots, part_sessions,
                                        part_matches)
@@ -797,6 +881,7 @@ class ContinuousEngine(PipelineBackend):
             self._donate_prompts(sessions)
         # a budget-1 or instant-EOS prompt may be done already
         self._sync()
+        self._publish_stream()     # the prefill's seed token streams too
 
     def decode_tick(self, sessions: List[Session]) -> None:
         if self.kv_layout == "paged":
@@ -806,6 +891,23 @@ class ContinuousEngine(PipelineBackend):
         self._since_sync += 1
         if self._since_sync >= self.sync_every:
             self._sync()
+        self._publish_stream()
+
+    def _publish_stream(self) -> None:
+        """Incremental token delivery for streaming sessions: one (tiny)
+        host read of the counts/emitted buffers per tick, updating each
+        ``stream=True`` session's ``generated`` in place so the pipeline
+        token callback can hand fresh tokens to client handles.  Costs
+        nothing when no occupied slot streams — the classic no-per-token-
+        host-sync decode loop is untouched."""
+        wanted = [(slot, s) for slot, s in enumerate(self.sessions)
+                  if s is not None and s.stream]
+        if not wanted:
+            return
+        counts = np.asarray(self.state.counts)
+        emitted = np.asarray(self.state.emitted)
+        for slot, s in wanted:
+            s.generated = [int(x) for x in emitted[slot, :counts[slot]]]
 
     # -- chunked prefill -------------------------------------------------
     def supports_chunked_prefill(self) -> bool:
@@ -923,7 +1025,8 @@ class ContinuousEngine(PipelineBackend):
         rows = eng.prefill_suffix_batch(
             [list(session.prompt)[:upto]], prefix_k=pk, prefix_v=pv,
             prefix_len=off, max_new_tokens=[session.max_new_tokens],
-            eos_id=[session.eos_id], cap_new=self.cap_new)
+            eos_id=[session.eos_id], cap_new=self.cap_new,
+            sampling=[session.params])
         bids = btm.block_table(req)
         bs = self.block_size
         st = self.state
@@ -964,11 +1067,15 @@ class ContinuousEngine(PipelineBackend):
             self._donate_prompts([session])
         # a budget-1 or instant-EOS prompt may be done already
         self._sync()
+        self._publish_stream()
 
     def abort_chunked(self, session: Session) -> None:
-        """Drop every hold a failed chunked prefill still has.  Its slot
-        was never claimed and its block-table row was never published, so
-        freeing the blocks is safe — no device row can write into them."""
+        """Drop every hold a failed (or cancelled) chunked prefill still
+        has.  Its slot was never claimed and its block-table row was
+        never published, so freeing the blocks is safe — no device row
+        can write into them.  Matched shared-prefix blocks were adopted
+        into the table at ``begin_prefill_chunks``, so ``free`` unrefs
+        them back to the trie without disturbing other holders."""
         req = session.req_id
         if self.block_table is not None:
             self.block_table.free(req)
@@ -977,6 +1084,35 @@ class ContinuousEngine(PipelineBackend):
         if self.engine.kv_slab.has_region(req):
             self.engine.kv_slab.free(req)
             self.engine.kv_slab.gc()
+
+    def cancel_session(self, session: Session) -> None:
+        """Tear down a mid-decode session NOW: publish its partial
+        generation (one row read), release its KV slab region, drop its
+        block table (shared prefix blocks just lose one holder — sibling
+        sequences and the prefix trie keep theirs), clear reservations,
+        and neutralize the device row (done=True, block table row ->
+        trash) so the freed physical blocks can be reallocated without
+        the stale row writing into them."""
+        slot = session.slot
+        if slot < 0 or self.sessions[slot] is not session:
+            raise ValueError(f"session {session.req_id} holds no decode "
+                             "slot")
+        st = self.state
+        counts = int(np.asarray(st.counts[slot]))
+        emitted = np.asarray(st.emitted[slot])
+        session.generated = [int(x) for x in emitted[:counts]]
+        self.engine.kv_slab.free(session.req_id)
+        self.engine.kv_slab.gc()
+        if self.block_table is not None:
+            self.block_table.free(session.req_id)
+            self._reserved.pop(session.req_id, None)
+        self.sessions[slot] = None
+        self._slot_len[slot] = 0
+        cache = dict(st.cache)
+        if self.block_table is not None:
+            cache["block_tables"] = cache["block_tables"].at[slot].set(0)
+        self.state = replace(st, cache=cache,
+                             done=st.done.at[slot].set(True))
 
     def _gather_own_prefix(self, req_id: int, length: int
                            ) -> Tuple[jax.Array, jax.Array]:
@@ -1031,7 +1167,11 @@ class ContinuousEngine(PipelineBackend):
                 counts=jnp.zeros((B,), jnp.int32),
                 done=jnp.ones((B,), bool),
                 budget=jnp.zeros((B,), jnp.int32),
-                eos=jnp.full((B,), -1, jnp.int32))
+                eos=jnp.full((B, STOP_SLOTS), -1, jnp.int32),
+                temp=jnp.zeros((B,), jnp.float32),
+                top_k=jnp.zeros((B,), jnp.int32),
+                top_p=jnp.ones((B,), jnp.float32),
+                seed=jnp.zeros((B,), jnp.int32))
             return
         if self.kv_layout == "paged":
             return      # pool and tables are fixed-shape for life
@@ -1065,7 +1205,14 @@ class ContinuousEngine(PipelineBackend):
             counts=st.counts.at[idx].set(_rows(rows.counts, None, k)),
             done=st.done.at[idx].set(_rows(rows.done, None, k)),
             budget=st.budget.at[idx].set(_rows(rows.budget, None, k)),
-            eos=st.eos.at[idx].set(_rows(rows.eos, None, k)))
+            eos=st.eos.at[idx].set(_rows(rows.eos, None, k)),
+            temp=st.temp.at[idx].set(_rows(rows.temp, None, k)),
+            top_k=st.top_k.at[idx].set(_rows(rows.top_k, None, k)),
+            top_p=st.top_p.at[idx].set(_rows(rows.top_p, None, k)),
+            seed=st.seed.at[idx].set(_rows(rows.seed, None, k)),
+            # sticky: once a sampled row joins, the sampling tick serves
+            # the whole slot cache (greedy rows keep argmax values)
+            sampling=st.sampling or rows.sampling)
 
     def _splice(self, rows: GenState, slots: List[int]) -> None:
         """Insert the first ``len(slots)`` rows of a freshly prefilled

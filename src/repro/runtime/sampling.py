@@ -1,0 +1,64 @@
+"""On-device per-request token sampling for the serving engine.
+
+The decode tick samples every batch row with that row's OWN generation
+params (temperature / top-k / top-p / seed) in one fused device op —
+heterogeneous batches of greedy and sampled requests advance together
+with no host round-trip:
+
+- ``temperature == 0`` rows take ``argmax`` through the exact same
+  expression the pre-sampling engine used, so greedy streams stay
+  bit-identical whether or not sampled rows share the batch;
+- sampled rows draw from ``softmax(logits / temperature)`` after top-k
+  and top-p (nucleus) filtering.
+
+Reproducibility is per *request*, not per batch: token ``i`` of a
+request seeded ``s`` is always drawn with ``fold_in(PRNGKey(s), i)``.
+The key never depends on which slot the request occupies, which other
+requests are co-batched, or how the scheduler interleaved prefill
+chunks — re-running a request alone reproduces its co-batched stream.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(logits: jax.Array, *, temperature: jax.Array,
+                  top_k: jax.Array, top_p: jax.Array, seed: jax.Array,
+                  step: jax.Array) -> jax.Array:
+    """One token per row from per-row sampling params.
+
+    logits: (B, V) float; temperature/top_p: (B,) float; top_k: (B,)
+    int (0 disables); seed: (B,) int; step: (B,) int — the index of the
+    token being drawn (``fold_in(key(seed), step)`` is the row's key).
+    Returns (B,) int32.  Rows with ``temperature <= 0`` return the plain
+    ``argmax`` (greedy), computed by the identical expression the greedy
+    engine uses.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    vocab = logits.shape[-1]
+    # temperature scale (greedy rows' scale is irrelevant — masked out by
+    # the final where — but must stay finite for the math to be safe)
+    temp = jnp.maximum(temperature, 1e-6)[:, None]
+    scaled = logits.astype(jnp.float32) / temp
+    order = jnp.sort(scaled, axis=-1)[:, ::-1]          # descending
+    # top-k: keep the k highest-scoring tokens (0 => whole vocab)
+    k = jnp.clip(jnp.where(top_k > 0, top_k, vocab), 1, vocab)
+    kth = jnp.take_along_axis(order, (k - 1)[:, None], axis=-1)
+    scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    # top-p over the top-k-filtered distribution: keep the smallest
+    # high-probability set whose mass reaches top_p (the token that
+    # crosses the threshold is kept, so the set is never empty)
+    order = jnp.where(order < kth, -jnp.inf, order)
+    probs = jax.nn.softmax(order, axis=-1)
+    exclusive = jnp.cumsum(probs, axis=-1) - probs
+    keep = exclusive < top_p[:, None]
+    thresh = jnp.min(jnp.where(keep, order, jnp.inf), axis=-1)
+    scaled = jnp.where(scaled < thresh[:, None], -jnp.inf, scaled)
+
+    def draw(s, i, row):
+        key = jax.random.fold_in(jax.random.PRNGKey(s), i)
+        return jax.random.categorical(key, row)
+
+    sampled = jax.vmap(draw)(seed, step, scaled).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)

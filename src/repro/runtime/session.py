@@ -19,7 +19,46 @@ from __future__ import annotations
 import enum
 import hashlib
 from dataclasses import dataclass, field
-from typing import Any, List, Optional, Sequence
+from typing import Any, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class GenerationParams:
+    """Per-request generation controls, carried by every :class:`Session`
+    and delivered to the engine's on-device sampler.
+
+    ``temperature == 0`` is greedy decoding (bit-identical to argmax);
+    ``temperature > 0`` draws from the softmax of ``logits/temperature``
+    after optional top-k / top-p (nucleus) filtering.  ``seed`` makes a
+    sampled request reproducible independent of batch composition: token
+    ``i`` of a request is always drawn with ``fold_in(key(seed), i)``,
+    so re-running the request — alone or co-batched with strangers —
+    yields the same stream.  ``stop`` is extra stop-token ids beyond
+    ``eos`` (generation includes the stop token, then halts).
+    """
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    top_k: int = 0                    # 0 = disabled (full vocab)
+    top_p: float = 1.0                # 1.0 = disabled
+    seed: int = 0
+    eos: Optional[int] = None
+    stop: Tuple[int, ...] = ()
+
+    def __post_init__(self) -> None:
+        if self.max_new_tokens < 0:
+            raise ValueError("max_new_tokens must be >= 0")
+        if self.temperature < 0:
+            raise ValueError("temperature must be >= 0")
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError("top_p must be in (0, 1]")
+        # tuple-ify so callers can pass lists; frozen needs object.__setattr__
+        object.__setattr__(self, "stop", tuple(self.stop))
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature == 0.0
 
 
 class SessionState(enum.Enum):
@@ -64,11 +103,25 @@ class Session:
     max_new_tokens: int = 0
     eos_id: Optional[int] = None
     payload: Any = None               # raw request payload (one-shot input)
+    # per-request sampling controls (see GenerationParams; temperature 0
+    # keeps the classic greedy path bit-for-bit)
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    stop: Tuple[int, ...] = ()        # extra stop ids beyond eos_id
 
     state: SessionState = SessionState.QUEUED
     generated: List[int] = field(default_factory=list)
     result: Any = None
     error: Optional[str] = None       # set when execution failed terminally
+    cancelled: bool = False           # torn down by Session.cancel()
+    # streaming: when True the serving backend publishes generated tokens
+    # to `generated` every tick (one tiny host read) instead of only at
+    # finish; `streamed` counts tokens already delivered through the
+    # pipeline's token-emission callback
+    stream: bool = False
+    streamed: int = 0
 
     # execution bookkeeping (filled in as the session advances)
     slot: int = -1                    # decode-slot index in the engine
@@ -112,13 +165,39 @@ class Session:
                    max_new_tokens=max_new_tokens, eos_id=eos_id,
                    payload=payload)
 
+    @classmethod
+    def from_params(cls, req_id: int, prompt: Sequence[int],
+                    params: GenerationParams,
+                    arrival_time: float = 0.0) -> "Session":
+        """Build a generative session from a prompt + GenerationParams
+        (the `repro.api` entry point's constructor)."""
+        return cls(req_id=req_id, seq_len=len(prompt),
+                   arrival_time=arrival_time, prompt=list(prompt),
+                   max_new_tokens=params.max_new_tokens,
+                   eos_id=params.eos, temperature=params.temperature,
+                   top_k=params.top_k, top_p=params.top_p,
+                   seed=params.seed, stop=tuple(params.stop))
+
+    @property
+    def params(self) -> GenerationParams:
+        """The session's generation controls as a GenerationParams view."""
+        return GenerationParams(
+            max_new_tokens=self.max_new_tokens,
+            temperature=self.temperature, top_k=self.top_k,
+            top_p=self.top_p, seed=self.seed, eos=self.eos_id,
+            stop=tuple(self.stop))
+
     def cache_key(self) -> str:
         """Memoization key: the full request identity — payload for
-        one-shot requests, (prompt, budget, eos) for generative ones,
-        which have no payload and would otherwise all collide."""
+        one-shot requests, (prompt, budget, eos, sampling params) for
+        generative ones.  Every generation knob is part of the key:
+        two same-prompt requests with different budgets or temperatures
+        produce different results and must never collide (the stale
+        ResponseCache bug)."""
         ident = (self.payload,
                  tuple(self.prompt) if self.prompt is not None else None,
-                 self.max_new_tokens, self.eos_id)
+                 self.max_new_tokens, self.eos_id, self.temperature,
+                 self.top_k, self.top_p, self.seed, tuple(self.stop))
         h = hashlib.sha1(repr(ident).encode()).hexdigest()
         return f"{self.seq_len}:{h}"
 
@@ -147,6 +226,21 @@ class Session:
         self.finish_time = now
         if result is not None:
             self.result = result
+        self.slot = -1
+
+    def cancel(self, now: float) -> None:
+        """Terminal cancellation from ANY live state (QUEUED, resumable
+        PREFILL, DECODE).  Unlike :meth:`finish` this is not a normal
+        transition — it marks the session cancelled and force-finishes
+        it; the serving backend has already released every resource the
+        session held.  Tokens generated before the cancel stay in
+        ``generated`` (a partial result)."""
+        if self.state is SessionState.FINISHED:
+            raise InvalidTransition(
+                f"session {self.req_id}: cannot cancel a finished session")
+        self.cancelled = True
+        self.state = SessionState.FINISHED
+        self.finish_time = now
         self.slot = -1
 
     # -- queries ---------------------------------------------------------
@@ -193,11 +287,14 @@ class Session:
 
     def stop_after(self, n_emitted: int, token: Optional[int] = None) -> bool:
         """Would the session stop after having emitted ``n_emitted`` tokens,
-        the last of which is ``token``? (budget, synthetic EOS position, or
-        a real EOS id)."""
+        the last of which is ``token``? (budget, synthetic EOS position, a
+        real EOS id, or any extra stop id)."""
         if n_emitted >= self.max_new_tokens:
             return True
         if self.eos_at is not None and n_emitted >= self.eos_at:
             return True
-        return token is not None and self.eos_id is not None \
-            and token == self.eos_id
+        if token is None:
+            return False
+        if self.eos_id is not None and token == self.eos_id:
+            return True
+        return token in self.stop

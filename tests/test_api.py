@@ -1,0 +1,500 @@
+"""Streaming client API: handle-based submit/stream/cancel, per-request
+sampling params, cancellation block conservation, and real-engine vs
+simulator parity."""
+import jax
+import pytest
+
+from repro.api import GenerationParams, TurboClient
+from repro.configs import get_smoke_config
+from repro.core import (AnalyticCostModel, PipelineConfig, ServingConfig,
+                        ServingSystem, SimConfig)
+from repro.models import init_params
+from repro.runtime import BucketLadder, InferenceEngine
+from repro.runtime.engine import ContinuousEngine
+from repro.runtime.session import Session, SessionState
+
+CM = AnalyticCostModel(flops_per_token=1e6, bytes_per_token=1e3,
+                       weight_bytes=1e6, overhead=1e-4)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.key(0))
+    return InferenceEngine(cfg, params, ladder=BucketLadder(
+        seq_buckets=(32, 64), batch_buckets=(1, 2, 4)))
+
+
+def make_client(engine, *, config=None, **backend_kw):
+    backend_kw.setdefault("max_slots", 4)
+    backend_kw.setdefault("cap_new", 32)
+    return TurboClient(ContinuousEngine(engine, **backend_kw),
+                       cost_model=CM, config=config)
+
+
+# ---------------------------------------------------------------------------
+# GenerationParams / submission plumbing
+# ---------------------------------------------------------------------------
+
+def test_generation_params_validation():
+    with pytest.raises(ValueError):
+        GenerationParams(temperature=-0.1)
+    with pytest.raises(ValueError):
+        GenerationParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        GenerationParams(top_k=-1)
+    with pytest.raises(ValueError):
+        GenerationParams(max_new_tokens=-1)
+    p = GenerationParams(stop=[5, 6])
+    assert p.stop == (5, 6) and p.is_greedy
+
+
+def test_too_many_stop_ids_rejected_at_submit(engine):
+    client = make_client(engine)
+    with pytest.raises(ValueError, match="stop ids"):
+        client.submit([1, 2, 3], GenerationParams(max_new_tokens=4,
+                                                  stop=(1, 2, 3, 4, 5)))
+
+
+# ---------------------------------------------------------------------------
+# Streaming
+# ---------------------------------------------------------------------------
+
+def test_stream_yields_exactly_the_generated_tokens_in_order(engine):
+    client = make_client(engine)
+    h = client.submit([1, 2, 3], GenerationParams(max_new_tokens=6))
+    streamed = list(h.stream())
+    assert streamed == h.session.generated
+    assert h.result() == [1, 2, 3] + streamed
+    # greedy (temperature=0) streams are bit-identical to the classic
+    # decode_step_batch loop
+    assert h.result() == engine.generate([[1, 2, 3]], max_new_tokens=6)[0]
+    assert h.ttft is not None and h.ttft >= 0
+    assert len(h.inter_token_latencies()) == len(streamed) - 1
+
+
+def test_stream_is_incremental_not_one_burst(engine):
+    """With stream=True tokens become host-visible tick by tick: after
+    a couple of stream items the session must still be mid-DECODE."""
+    client = make_client(engine)
+    h = client.submit([4, 5, 6], GenerationParams(max_new_tokens=10))
+    it = h.stream()
+    first = next(it)
+    assert h.state is SessionState.DECODE     # nowhere near finished
+    rest = list(it)
+    assert [first] + rest == h.session.generated
+
+
+def test_result_without_stream_flag_still_completes(engine):
+    client = make_client(engine)
+    h = client.submit([9, 8, 7], GenerationParams(max_new_tokens=4),
+                      stream=False)
+    assert h.result() == engine.generate([[9, 8, 7]],
+                                         max_new_tokens=4)[0]
+    # non-streamed: the whole generation was delivered at finish
+    assert h.tokens() == h.session.generated
+
+
+# ---------------------------------------------------------------------------
+# Per-request sampling
+# ---------------------------------------------------------------------------
+
+def test_seeded_sampling_reproducible_across_runs(engine):
+    client = make_client(engine)
+    p = GenerationParams(max_new_tokens=8, temperature=1.0, seed=42)
+    a = client.submit([1, 2, 3], p).result()
+    b = client.submit([1, 2, 3], p).result()
+    assert a == b
+    # a different seed (or greedy) eventually diverges
+    others = [client.submit(
+        [1, 2, 3], GenerationParams(max_new_tokens=8, temperature=1.0,
+                                    seed=s)).result() for s in (7, 11, 13)]
+    greedy = client.submit([1, 2, 3],
+                           GenerationParams(max_new_tokens=8)).result()
+    assert any(o != a for o in others) or a != greedy
+
+
+def test_sampled_request_independent_of_batch_composition(engine):
+    """Per-row PRNG keys: a seeded request draws the same stream alone
+    and co-batched with strangers (fold_in(key(seed), token_index))."""
+    client = make_client(engine)
+    p = GenerationParams(max_new_tokens=6, temperature=0.9, seed=5)
+    alone = client.submit([2, 4, 6], p).result()
+    client2 = make_client(engine)
+    mates = [client2.submit([1, 1, 1, 1],
+                            GenerationParams(max_new_tokens=6,
+                                             temperature=1.3, seed=99)),
+             client2.submit([3, 5], GenerationParams(max_new_tokens=4))]
+    h = client2.submit([2, 4, 6], p)
+    assert h.result() == alone
+    for m in mates:
+        m.result()
+
+
+def test_greedy_row_unaffected_by_sampled_sibling(engine):
+    client = make_client(engine)
+    ref = engine.generate([[1, 2, 3]], max_new_tokens=6)[0]
+    hs = client.submit([7, 8], GenerationParams(max_new_tokens=6,
+                                                temperature=1.2, seed=1))
+    hg = client.submit([1, 2, 3], GenerationParams(max_new_tokens=6))
+    assert hg.result() == ref
+    hs.result()
+
+
+def test_top_k_one_is_greedy(engine):
+    client = make_client(engine)
+    greedy = client.submit([5, 6, 7],
+                           GenerationParams(max_new_tokens=6)).result()
+    k1 = client.submit([5, 6, 7],
+                       GenerationParams(max_new_tokens=6,
+                                        temperature=2.0,
+                                        top_k=1)).result()
+    assert k1 == greedy
+
+
+def test_stop_ids_halt_generation(engine):
+    probe = engine.generate([[1, 2, 3]], max_new_tokens=6)[0]
+    stop = probe[4]                      # second generated token
+    client = make_client(engine)
+    h = client.submit([1, 2, 3], GenerationParams(max_new_tokens=6,
+                                                  stop=(stop,)))
+    out = h.result()
+    assert out == probe[:5]              # stopped at (incl.) the stop id
+
+
+# ---------------------------------------------------------------------------
+# Cancellation: every state, zero leaked blocks
+# ---------------------------------------------------------------------------
+
+def test_cancel_queued_request(engine):
+    client = make_client(engine)
+    h = client.submit([1, 2, 3], GenerationParams(max_new_tokens=8))
+    assert h.state is SessionState.QUEUED
+    assert h.cancel()
+    assert h.done and h.cancelled and not h.cancel()   # idempotent
+    assert list(h.stream()) == []
+    assert h.result() == [1, 2, 3]       # no generation happened
+    assert client.pipeline.idle()
+
+
+def test_cancel_mid_decode_returns_every_block(engine):
+    client = make_client(engine)
+    backend = client.backend
+    other = client.submit([9, 9, 9], GenerationParams(max_new_tokens=20))
+    h = client.submit([1, 2, 3, 4], GenerationParams(max_new_tokens=24))
+    it = h.stream()
+    for _ in range(4):
+        next(it)
+    btm = backend.block_table
+    free_before_cancel = btm.free_blocks
+    held = btm.blocks_of(h.session.req_id)
+    assert h.state is SessionState.DECODE and held > 0
+    assert h.cancel()
+    # the cancelled request's blocks (and nothing else) came back
+    assert btm.free_blocks == free_before_cancel + held
+    assert h.session.req_id not in backend._reserved
+    assert not engine.kv_slab.has_region(h.session.req_id)
+    partial = h.tokens()
+    assert len(partial) >= 4             # kept what was generated
+    # the surviving request is unharmed and the pool drains to empty
+    other.result()
+    assert btm.used_blocks == 0
+    assert btm.free_blocks == btm.num_blocks - 1
+    assert engine.kv_slab.live_bytes == 0
+
+
+def test_cancel_mid_chunked_prefill_returns_every_block(engine):
+    client = make_client(
+        engine, config=PipelineConfig(policy="dp", chunked_prefill=True,
+                                      prefill_chunk_tokens=16))
+    backend = client.backend
+    short = client.submit([1, 2, 3], GenerationParams(max_new_tokens=20))
+    it = short.stream()
+    next(it)                             # short is decoding
+    long = client.submit(list(range(2, 42)),
+                         GenerationParams(max_new_tokens=8))
+    while long.session not in client.pipeline.chunking:
+        next(it)                         # admit the long prompt's chunks
+    # advance at least one chunk but stay mid-prompt
+    while long.session.prefilled_tokens == 0:
+        next(it)
+    assert long.state is SessionState.PREFILL
+    assert 0 < long.session.prefilled_tokens < long.session.seq_len
+    btm = backend.block_table
+    rid = long.session.req_id
+    held = btm.blocks_of(rid)
+    reserved = backend._reserved[rid]
+    free_before = btm.free_blocks
+    assert long.cancel()
+    # blocks AND reservations AND the reserved decode slot all released
+    assert btm.free_blocks == free_before + held
+    assert rid not in backend._reserved
+    assert rid not in backend._chunk_slots
+    assert not engine.kv_slab.has_region(rid)
+    assert reserved >= 0
+    short.result()
+    assert btm.used_blocks == 0
+    assert btm.free_blocks == btm.num_blocks - 1
+    assert engine.kv_slab.live_bytes == 0
+
+
+def test_cancel_preserves_prefix_cache_refcounts(engine):
+    """Cancelling a sharer only drops ITS holds: the radix cache and the
+    sibling sequence keep theirs, and the sibling's tokens are
+    unchanged."""
+    client = make_client(engine, prefix_cache=True)
+    backend = client.backend
+    sys_prompt = list(range(3, 3 + 32))          # two full 16-tok blocks
+    warm = client.submit(sys_prompt + [99], GenerationParams(
+        max_new_tokens=2))
+    warm.result()                                # prefix now resident
+    a = client.submit(sys_prompt + [50], GenerationParams(
+        max_new_tokens=16))
+    b = client.submit(sys_prompt + [60], GenerationParams(
+        max_new_tokens=16))
+    ita = a.stream()
+    for _ in range(3):
+        next(ita)
+    assert backend.prefix_stats()["hits"] >= 2     # both followers hit
+    shared = [blk for blk in
+              backend.block_table.block_table(a.session.req_id)
+              if backend.block_table.ref_count(blk) > 1]
+    assert shared, "sharers must actually share blocks"
+    refs_before = {blk: backend.block_table.ref_count(blk)
+                   for blk in shared}
+    assert a.cancel()
+    for blk, r in refs_before.items():
+        assert backend.block_table.ref_count(blk) == r - 1
+    # sibling unaffected: identical to an isolated greedy generation
+    assert b.result() == engine.generate([sys_prompt + [60]],
+                                         max_new_tokens=16)[0]
+    # all non-cache blocks returned; warm cache entries are the only
+    # remaining holders
+    btm = backend.block_table
+    assert btm.free_blocks + backend.prefix_cache.cached_blocks == \
+        btm.num_blocks - 1
+    assert engine.kv_slab.live_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# Simulator parity: the same API over the virtual clock
+# ---------------------------------------------------------------------------
+
+def test_simulator_stream_and_result_parity():
+    client = TurboClient.simulated(cost_model=CM)
+    h = client.submit([1, 2, 3], GenerationParams(max_new_tokens=5))
+    assert len(list(h.stream())) == 5    # one token per decode tick
+    assert h.done and len(h.result()) == 3 + 5
+    assert h.ttft is not None and h.inter_token_latencies()
+
+
+def test_simulator_cancel_parity_all_states():
+    client = TurboClient.simulated(
+        cost_model=CM,
+        sim_config=SimConfig(policy="dp", chunked_prefill=True,
+                             prefill_chunk_tokens=16, kv_block_size=16))
+    backend = client.backend
+    # DECODE: cancel mid-generation, KV charge dropped immediately
+    a = client.submit([1] * 8, GenerationParams(max_new_tokens=50))
+    ita = a.stream()
+    for _ in range(3):
+        next(ita)
+    assert a.state is SessionState.DECODE
+    assert a.cancel()
+    assert a.session.req_id not in backend.kv_live
+    assert list(ita) == []
+    # PREFILL: a long prompt admitted chunk-wise mid-decode
+    c = client.submit([2] * 6, GenerationParams(max_new_tokens=40))
+    itc = c.stream()
+    next(itc)
+    b = client.submit([3] * 64, GenerationParams(max_new_tokens=4))
+    while b.session not in client.pipeline.chunking:
+        next(itc)
+    assert b.state is SessionState.PREFILL
+    assert b.cancel()
+    assert b.session.req_id not in backend.kv_live
+    # QUEUED
+    q = client.submit([4] * 4, GenerationParams(max_new_tokens=4))
+    assert q.cancel() and q.state is SessionState.FINISHED
+    c.result()
+    assert not backend.kv_live           # nothing leaked
+    assert client.pipeline.stats.cancelled == 3
+
+
+def test_real_vs_simulator_api_parity_token_counts():
+    """The identical client calls produce the same stream shape on both
+    backends: N tokens per request, in submit order, finishing clean."""
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.key(0))
+    eng = InferenceEngine(cfg, params, ladder=BucketLadder(
+        seq_buckets=(32, 64), batch_buckets=(1, 2, 4)))
+    real = TurboClient(ContinuousEngine(eng, max_slots=4, cap_new=16),
+                       cost_model=CM)
+    sim = TurboClient.simulated(cost_model=CM)
+    shapes = {}
+    for name, client in (("real", real), ("sim", sim)):
+        handles = [client.submit([1 + i] * (3 + i),
+                                 GenerationParams(max_new_tokens=4 + i))
+                   for i in range(3)]
+        shapes[name] = [len(list(h.stream())) for h in handles]
+    assert shapes["real"] == shapes["sim"] == [4, 5, 6]
+
+
+# ---------------------------------------------------------------------------
+# Auto-pump modes
+# ---------------------------------------------------------------------------
+
+def test_thread_auto_pump_needs_no_manual_ticks():
+    client = TurboClient.simulated(cost_model=CM, auto_pump="thread")
+    try:
+        h = client.submit([1, 2, 3], GenerationParams(max_new_tokens=6))
+        assert h.result(timeout=10.0) == [1, 2, 3] + [1] * 6
+        assert len(list(h.stream())) == 6
+    finally:
+        client.close()
+
+
+def test_closed_thread_client_raises_instead_of_hanging():
+    client = TurboClient.simulated(cost_model=CM, auto_pump="thread")
+    h = client.submit([1, 2], GenerationParams(max_new_tokens=40))
+    client.close()
+    if not h.done:                       # close() won the race
+        with pytest.raises(RuntimeError, match="closed"):
+            h.result(timeout=5.0)
+
+
+def test_owner_driven_client_refuses_to_pump():
+    """auto_pump=False means the owner drives ticks: consuming an
+    unfinished handle raises instead of stealing a tick; after the
+    owner drains, the handle works normally."""
+    sys_ = ServingSystem(backend=_VirtualCacheBackend(), cost_model=CM,
+                         config=ServingConfig(policy="dp"))
+    h = sys_.client.submit([1, 2, 3], GenerationParams(max_new_tokens=4))
+    with pytest.raises(RuntimeError, match="owner-driven"):
+        h.result()
+    sys_.drain()
+    assert h.result() == [1, 2, 3, 4, 0]
+
+
+def test_handle_registry_does_not_retain_discarded_handles():
+    """The client's handle registry is weak: dropping the handle (the
+    ServingSystem flow keeps only Responses) releases it even while the
+    client lives on."""
+    import gc
+    client = TurboClient.simulated(cost_model=CM)
+    h = client.submit([1, 2], GenerationParams(max_new_tokens=2))
+    rid = h.req_id
+    h.result()
+    del h
+    gc.collect()
+    assert rid not in client._handles
+
+
+def test_cancel_trims_token_time_telemetry():
+    client = TurboClient.simulated(cost_model=CM)
+    h = client.submit([1] * 4, GenerationParams(max_new_tokens=30))
+    it = h.stream()
+    for _ in range(3):
+        next(it)
+    h.cancel()
+    assert len(h.session.token_times) == len(h.session.generated)
+
+
+def test_sync_pump_raises_on_foreign_session():
+    client = TurboClient.simulated(cost_model=CM)
+    h = client.submit([1, 2], GenerationParams(max_new_tokens=2))
+    h.result()
+    other = TurboClient.simulated(cost_model=CM)
+    foreign = Session(0, 2, 0.0, prompt=[1, 2], max_new_tokens=2)
+    stray = other.submit_session(foreign)
+    with pytest.raises(RuntimeError, match="idle"):
+        # handle bound to `other`, but its pipeline was never given work
+        # to finish this session (we drain it behind its back)
+        other.pipeline.queue.clear()
+        stray.result()
+
+
+# ---------------------------------------------------------------------------
+# ResponseCache: generation params are part of the identity (satellite)
+# ---------------------------------------------------------------------------
+
+def _cached_system():
+    return ServingSystem(backend=_VirtualCacheBackend(),
+                         cost_model=CM,
+                         config=ServingConfig(policy="dp",
+                                              enable_cache=True))
+
+
+class _VirtualCacheBackend:
+    """Tiny one-shot-style backend: finishes generative sessions at
+    prefill with a result derived from (prompt, budget, temperature) so
+    cache collisions are observable."""
+
+    def validate(self, session):
+        pass
+
+    def free_slots(self):
+        return None
+
+    def free_kv_tokens(self):
+        return None
+
+    def kv_demand(self, session):
+        return session.total_len
+
+    def supports_chunked_prefill(self):
+        return False
+
+    def prefill_batch(self, sessions, padded_len):
+        for s in sessions:
+            s.generated = [s.max_new_tokens, int(s.temperature * 10)]
+            s.result = list(s.prompt or []) + s.generated
+            s.start_decode(0.0)
+            s.finish(0.0)
+
+    def decode_tick(self, sessions):
+        raise AssertionError("unused")
+
+
+def test_response_cache_keys_on_generation_params():
+    sys_ = _cached_system()
+    a = Session.from_params(0, [1, 2, 3], GenerationParams(
+        max_new_tokens=4))
+    b = Session.from_params(1, [1, 2, 3], GenerationParams(
+        max_new_tokens=9))                      # same prompt, new budget
+    c = Session.from_params(2, [1, 2, 3], GenerationParams(
+        max_new_tokens=4, temperature=0.5, seed=3))
+    assert sys_.submit(a) is None
+    sys_.drain()
+    assert sys_.submit(b) is None, "different budget must MISS"
+    sys_.drain()
+    assert sys_.submit(c) is None, "different sampling must MISS"
+    sys_.drain()
+    # identical params DO hit
+    d = Session.from_params(3, [1, 2, 3], GenerationParams(
+        max_new_tokens=4))
+    hit = sys_.submit(d)
+    assert hit is not None and hit.cached
+    assert hit.result == [1, 2, 3, 4, 0]
+
+
+def test_response_cache_never_stores_cancelled_results():
+    sys_ = _cached_system()
+    s = Session.from_params(0, [5, 5], GenerationParams(max_new_tokens=3))
+    sys_.submit(s)
+    assert sys_.cancel(s)                # queued -> cancelled response
+    fresh = Session.from_params(1, [5, 5],
+                                GenerationParams(max_new_tokens=3))
+    assert sys_.submit(fresh) is None    # no stale hit from the cancel
+
+
+# ---------------------------------------------------------------------------
+# launch/serve.py argparse (satellite: --smoke / --no-smoke)
+# ---------------------------------------------------------------------------
+
+def test_serve_smoke_flag_is_negatable():
+    from repro.launch.serve import build_parser
+    ap = build_parser()
+    assert ap.parse_args([]).smoke is True
+    assert ap.parse_args(["--smoke"]).smoke is True
+    assert ap.parse_args(["--no-smoke"]).smoke is False
