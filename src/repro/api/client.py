@@ -164,7 +164,8 @@ class TurboClient:
                  cost_model: Optional[CostModel] = None,
                  config: Optional[PipelineConfig] = None,
                  clock: Optional[Callable[[], float]] = None,
-                 auto_pump: Union[str, bool] = "sync") -> None:
+                 auto_pump: Union[str, bool] = "sync",
+                 warmup: bool = False) -> None:
         if auto_pump not in ("sync", "thread", False):
             raise ValueError("auto_pump must be 'sync', 'thread' or "
                              f"False, got {auto_pump!r}")
@@ -172,6 +173,13 @@ class TurboClient:
             clock = getattr(backend, "clock", None) or time.monotonic
         self.clock = clock
         self.backend = backend
+        # AOT warmup at construction: compile every reachable tick /
+        # prefill variant before the first submit, so no request ever
+        # pays a first-hit JIT.  Opt-in here (tests build many cheap
+        # clients); from_arch defaults it ON.
+        self.warmup_stats: Optional[dict] = None
+        if warmup and hasattr(backend, "warmup_aot"):
+            self.warmup_stats = backend.warmup_aot()
         cost = cost_model if cost_model is not None \
             else AnalyticCostModel(**_DEFAULT_COST)
         self.pipeline = ServingPipeline(
@@ -207,10 +215,13 @@ class TurboClient:
                   config: Optional[PipelineConfig] = None,
                   init_seed: int = 0,
                   auto_pump: Union[str, bool] = "sync",
+                  warmup: bool = True,
                   **backend_kw) -> "TurboClient":
         """Build the whole serving stack from an arch name: reduced
         (``smoke=True``) or full config, fresh params, a bucketed
-        InferenceEngine, and a paged-KV ContinuousEngine backend."""
+        InferenceEngine, and a paged-KV ContinuousEngine backend.
+        ``warmup=True`` (default) AOT-compiles every reachable tick /
+        prefill variant before returning (``client.warmup_stats``)."""
         import jax
         from repro.configs import get_config, get_smoke_config
         from repro.models import init_params
@@ -226,7 +237,7 @@ class TurboClient:
                                    prefix_cache=prefix_cache,
                                    **backend_kw)
         return cls(backend, cost_model=cost_model, config=config,
-                   auto_pump=auto_pump)
+                   auto_pump=auto_pump, warmup=warmup)
 
     @classmethod
     def simulated(cls, cost_model: Optional[CostModel] = None,

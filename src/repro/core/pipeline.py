@@ -136,6 +136,26 @@ class PipelineBackend:
         """Release everything ``begin_prefill_chunks``/``prefill_chunk``
         hold for a session whose chunked prefill failed terminally."""
 
+    # -- fused chunk+decode (optional capability) ------------------------
+    def supports_fused_chunk_decode(self) -> bool:
+        """Whether :meth:`chunk_decode_tick` runs a prefill chunk and a
+        decode tick as one combined dispatch.  Backends whose chunk and
+        decode work are independent device programs with no host sync
+        between them can fuse; the default says no and the pipeline
+        falls back to alternating ticks."""
+        return False
+
+    def chunk_decode_tick(self, session: Session, upto: int,
+                          decoding: List[Session]) -> None:
+        """Advance ``session``'s resumable prefill to ``upto`` AND run
+        one decode tick over ``decoding`` in a single dispatch — the
+        decode batch stops paying a full tick of stall per chunk.  Only
+        ever called for NON-final chunks (``upto < session.seq_len``),
+        so the freshly chunked session never splices mid-call.  The
+        default implementation is the unfused sequence."""
+        self.prefill_chunk(session, upto)
+        self.decode_tick(decoding)
+
     # -- cancellation (optional capability) ------------------------------
     def cancel_session(self, session: Session) -> None:
         """Tear down a mid-DECODE session immediately: free its KV
@@ -175,6 +195,12 @@ class PipelineConfig:
     # prefill_chunk_tokens pins it explicitly.
     chunked_prefill: bool = False
     prefill_chunk_tokens: Optional[int] = None
+    # fuse each NON-final prefill chunk with the decode tick into one
+    # dispatch (backend capability permitting): on a chunk turn the
+    # decode batch advances too, so chunking a long prompt costs the
+    # in-flight sequences no extra inter-token latency and per-tick
+    # dispatch overhead is paid once instead of twice
+    fused_chunk_decode: bool = True
 
 
 @dataclass
@@ -409,10 +435,18 @@ class ServingPipeline:
         decoding = self._decoding()
         if self.chunking and (self._chunk_turn or not decoding):
             # a chunk's turn: advance the oldest resumable prefill by one
-            # budget-sized chunk; the next tick goes back to decode
+            # budget-sized chunk; the next tick goes back to decode.
+            # When the backend can fuse, a NON-final chunk and the decode
+            # tick run as ONE dispatch — the decode batch advances too,
+            # so chunking costs it no stalled tick
             self._chunk_turn = False
-            self._advance_chunk(done)
+            fused = self._advance_chunk(done, decoding)
             self.stats.chunk_ticks += 1
+            if fused:
+                now = self.clock()
+                for s in decoding:
+                    s.token_times.append(now)
+                self.stats.decode_ticks += 1
         else:
             decision = self._admission_decision()
             if decision == "defer":
@@ -545,14 +579,25 @@ class ServingPipeline:
         # decode tick is consumed, decode runs before the next chunk
         self._chunk_turn = False
 
-    def _advance_chunk(self, done: List[Session]) -> None:
+    def _advance_chunk(self, done: List[Session],
+                       decoding: Optional[List[Session]] = None) -> bool:
         """One chunk of progress for the oldest resumable prefill; on
         its final chunk the backend splices the session into decode and
-        it leaves the chunk queue."""
+        it leaves the chunk queue.  Returns True when the chunk was
+        fused with a decode tick (``decoding`` advanced too): non-final
+        chunks only — a final chunk splices a fresh row into the decode
+        batch, which must not advance before its first timestamped tick
+        — and only when both config and backend support the fusion."""
         s = self.chunking[0]
         upto = min(s.prefilled_tokens + self._chunk_tokens(), s.seq_len)
+        fused = bool(decoding) and upto < s.seq_len and \
+            self.config.fused_chunk_decode and \
+            self.backend.supports_fused_chunk_decode()
         try:
-            self.backend.prefill_chunk(s, upto)
+            if fused:
+                self.backend.chunk_decode_tick(s, upto, decoding)
+            else:
+                self.backend.prefill_chunk(s, upto)
         except Exception as exc:
             if not s.is_finished:
                 s.error = str(exc)
@@ -563,7 +608,7 @@ class ServingPipeline:
             self.finished.append(s)
             raise
         if s.prefilled_tokens < s.seq_len:
-            return                       # mid-prompt; resume next turn
+            return fused                 # mid-prompt; resume next turn
         self.chunking.remove(s)
         if s.is_finished:
             done.append(s)
@@ -572,6 +617,7 @@ class ServingPipeline:
         else:
             raise RuntimeError(f"backend left session {s.req_id} in "
                                f"{s.state} after its final chunk")
+        return fused
 
     def idle(self) -> bool:
         return not self.queue and not self.live and not self.chunking

@@ -118,6 +118,10 @@ class SimConfig:
     # (None derives it from prefill_stall_factor x decode tick cost)
     chunked_prefill: bool = False
     prefill_chunk_tokens: Optional[int] = None
+    # decode-fused chunks (see PipelineConfig): a non-final chunk and
+    # the decode tick dispatch as one group, saving one per-dispatch
+    # overhead and a stalled decode tick per chunk
+    fused_chunk_decode: bool = True
     # prefix-sharing model (mirrors the real engine's RadixPrefixCache
     # over a Workload prefix mix): once one member of a prefix cohort has
     # prefilled, later members are charged only their uncached suffix —
@@ -144,7 +148,8 @@ class SimConfig:
             prefill_stall_factor=self.prefill_stall_factor,
             min_decode_batch=self.min_decode_batch,
             chunked_prefill=self.chunked_prefill,
-            prefill_chunk_tokens=self.prefill_chunk_tokens)
+            prefill_chunk_tokens=self.prefill_chunk_tokens,
+            fused_chunk_decode=self.fused_chunk_decode)
 
 
 class VirtualClock:
@@ -382,6 +387,38 @@ class VirtualBackend(PipelineBackend):
             self.decoding.append(s)
         if self.config.kv_free == "batch":
             self._groups.append({s.req_id: s})
+            self._sweep_groups()
+        self._sample_kv()
+
+    def supports_fused_chunk_decode(self) -> bool:
+        return True
+
+    def chunk_decode_tick(self, s: Session, upto: int,
+                          decoding: List[Session]) -> None:
+        """Fused chunk+decode model: the chunk pass and the decode tick
+        dispatch as one group, so the combined service time drops one
+        per-dispatch overhead relative to running them back-to-back.
+        Only NON-final chunks fuse (the pipeline guarantees it), so no
+        decode-seeding bookkeeping belongs here."""
+        n = upto - s.prefilled_tokens
+        clat = self.service(self.cost.prefill_latency(max(n, 1), 1))
+        self.chunk_latencies.append(clat)    # decoding is never empty here
+        self.clock.advance(clat)
+        s.prefilled_tokens = upto
+        b = len(decoding)
+        ctx = sum(d.seq_len + d.tokens_emitted for d in decoding) / b
+        lat = self.service(self.cost.decode_latency(b, int(ctx)))
+        lat = max(lat - getattr(self.cost, "overhead", 0.0), 0.0)
+        self.decode_latencies.append(lat)
+        self.clock.advance(lat)
+        now = self.clock.now
+        for d in decoding:
+            d.generated.append(1)
+            if d.stop_after(d.tokens_emitted):
+                d.finish(now)
+                self._on_finish(d)
+        self.decoding = [d for d in self.decoding if not d.is_finished]
+        if self.config.kv_free == "batch":
             self._sweep_groups()
         self._sample_kv()
 

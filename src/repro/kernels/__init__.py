@@ -1,11 +1,35 @@
-"""Pallas TPU kernels for the paper's compute hot-spots (C1) + flash attn.
+"""Pallas TPU kernels for the paper's compute hot-spots (C1) + serving.
 
 <name>.py hold pl.pallas_call kernels with explicit BlockSpec VMEM tiling;
-ops.py exposes jit'd wrappers; ref.py holds the pure-jnp oracles.
+ops.py exposes jit'd wrappers (impl = xla | pallas | interpret | auto);
+ref.py holds the pure-jnp oracles every kernel is tested against.
+
+Kernel inventory — what fires when:
+
+  softmax.py          ``fused_softmax`` — masked scaled softmax as a
+                      batch reduction (paper §4.1.2).  Fires in the
+                      encoder/classify attention path.
+  layernorm.py        ``fused_layernorm`` / ``fused_rmsnorm`` — AddBias+
+                      Residual+Norm single-pass fusion (paper Eq. 1).
+                      Fires once per transformer sublayer.
+  flash_attention.py  ``flash_attention`` — tiled causal attention with
+                      running (m, l, acc).  Fires on prefill/extend
+                      (Sq > 1), incl. the chunked-prefill suffix path.
+  flash_decode.py     ``flash_decode`` / ``flash_decode_paged`` — split-K
+                      decode attention (Sq = 1); the paged variant walks
+                      per-row block tables via scalar prefetch.  Fires
+                      every decode tick of the serving loop (contiguous
+                      and paged KV layouts respectively).
+  sampling.py         ``fused_sample`` — temperature + top-k + nucleus
+                      masking + Gumbel-max categorical draw in one pass
+                      over a bounded candidate set (no full-vocab sort).
+                      Fires at the end of every *sampled* decode tick
+                      (greedy batches keep the plain argmax tick).
 """
 from repro.kernels.ops import (flash_attention, flash_decode,
                                flash_decode_paged, fused_layernorm,
-                               fused_rmsnorm, fused_softmax)
+                               fused_rmsnorm, fused_sample, fused_softmax)
 
 __all__ = ["flash_attention", "flash_decode", "flash_decode_paged",
-           "fused_layernorm", "fused_rmsnorm", "fused_softmax"]
+           "fused_layernorm", "fused_rmsnorm", "fused_sample",
+           "fused_softmax"]

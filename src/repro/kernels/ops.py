@@ -18,6 +18,7 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.flash_decode import (flash_decode_paged_pallas,
                                         flash_decode_pallas)
 from repro.kernels.layernorm import norm_pallas
+from repro.kernels.sampling import sample_pallas
 from repro.kernels.softmax import softmax_pallas
 
 
@@ -66,6 +67,22 @@ def fused_rmsnorm(x, gamma, bias=None, residual=None, *, eps: float = 1e-6,
                        return_residual=return_residual,
                        block_rows=block_rows,
                        interpret=(impl == "interpret"))
+
+
+def fused_sample(logits, temperature, top_k, top_p, gumbel, *,
+                 impl: str = "auto", block_rows: int = 0) -> jax.Array:
+    """Fused temperature/top-k/top-p/Gumbel sampling over (B, V) logits.
+
+    gumbel: (B, C) pre-drawn per-row Gumbel noise — C bounds the
+    candidate set (no full-vocab sort).  Returns (B,) int32 tokens;
+    temperature<=0 rows short-circuit to argmax.
+    """
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.sample_ref(logits, temperature, top_k, top_p, gumbel)
+    return sample_pallas(logits, temperature, top_k, top_p, gumbel,
+                         block_rows=block_rows,
+                         interpret=(impl == "interpret"))
 
 
 def flash_attention(q, k, v, lengths=None, *, causal: bool = True,

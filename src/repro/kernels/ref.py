@@ -70,6 +70,42 @@ def rmsnorm_ref(x: jax.Array, gamma: jax.Array,
     return y
 
 
+def sample_ref(logits: jax.Array, temperature: jax.Array,
+               top_k: jax.Array, top_p: jax.Array,
+               gumbel: jax.Array) -> jax.Array:
+    """Fused sampling oracle. logits: (B, V); temperature/top_k/top_p:
+    (B,); gumbel: (B, C) pre-drawn per-row Gumbel noise.
+
+    Candidate set = the top C = gumbel.shape[-1] temperature-scaled
+    logits (``lax.top_k`` tie order: lowest index first).  top_k == 0 or
+    top_k > C truncates to C.  Sampling uses the Gumbel-max trick over
+    the kept candidates — an exact categorical draw from the
+    renormalized top-k/top-p distribution.  Rows with temperature <= 0
+    return the plain argmax (greedy), computed by the identical
+    expression the greedy engine uses.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    c = gumbel.shape[-1]
+    temp = jnp.maximum(temperature, 1e-6)[:, None]
+    scaled = logits.astype(jnp.float32) / temp
+    vals, idx = jax.lax.top_k(scaled, c)                 # (B, C) desc
+    cand = jnp.arange(c)[None, :]
+    k = jnp.clip(jnp.where(top_k > 0, top_k, c), 1, c)[:, None]
+    keep = cand < k
+    masked = jnp.where(keep, vals, -jnp.inf)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    e = jnp.where(keep, jnp.exp(masked - m), 0.0)
+    probs = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    # nucleus: keep the smallest high-probability set whose mass reaches
+    # top_p (the crossing token is kept, so the set is never empty)
+    exclusive = jnp.cumsum(probs, axis=-1) - probs
+    keep = keep & (exclusive < top_p[:, None])
+    pert = jnp.where(keep, vals + gumbel.astype(jnp.float32), -jnp.inf)
+    choice = jnp.argmax(pert, axis=-1)
+    sampled = jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0]
+    return jnp.where(temperature > 0, sampled.astype(jnp.int32), greedy)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         lengths: Optional[jax.Array] = None,
                         causal: bool = True,

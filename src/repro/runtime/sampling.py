@@ -9,56 +9,53 @@ with no host round-trip:
   expression the pre-sampling engine used, so greedy streams stay
   bit-identical whether or not sampled rows share the batch;
 - sampled rows draw from ``softmax(logits / temperature)`` after top-k
-  and top-p (nucleus) filtering.
+  and top-p (nucleus) filtering, restricted to the row's top
+  ``SAMPLE_CANDIDATES`` logits (the LightSeq bound: no full-vocab sort;
+  ``top_k == 0`` or ``top_k > SAMPLE_CANDIDATES`` truncates there).
+
+The heavy lifting is ``kernels.ops.fused_sample`` (Pallas kernel on
+TPU, pure-jnp reference elsewhere); this module owns the PRNG contract
+and hands the kernel pre-drawn Gumbel noise, so every impl consumes
+identical randomness.
 
 Reproducibility is per *request*, not per batch: token ``i`` of a
-request seeded ``s`` is always drawn with ``fold_in(PRNGKey(s), i)``.
-The key never depends on which slot the request occupies, which other
-requests are co-batched, or how the scheduler interleaved prefill
-chunks — re-running a request alone reproduces its co-batched stream.
+request seeded ``s`` is always drawn with noise from
+``fold_in(PRNGKey(s), i)``.  The key never depends on which slot the
+request occupies, which other requests are co-batched, or how the
+scheduler interleaved prefill chunks — re-running a request alone
+reproduces its co-batched stream.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
+
+# Bounded candidate set per row (LightSeq-style, arxiv 2010.13887):
+# sampling only ever touches the top-C logits.  64 comfortably covers
+# practical top-k/top-p settings; the tail mass beyond it is noise.
+SAMPLE_CANDIDATES = 64
+
 
 def sample_tokens(logits: jax.Array, *, temperature: jax.Array,
                   top_k: jax.Array, top_p: jax.Array, seed: jax.Array,
-                  step: jax.Array) -> jax.Array:
+                  step: jax.Array, impl: str = "auto") -> jax.Array:
     """One token per row from per-row sampling params.
 
     logits: (B, V) float; temperature/top_p: (B,) float; top_k: (B,)
     int (0 disables); seed: (B,) int; step: (B,) int — the index of the
-    token being drawn (``fold_in(key(seed), step)`` is the row's key).
-    Returns (B,) int32.  Rows with ``temperature <= 0`` return the plain
-    ``argmax`` (greedy), computed by the identical expression the greedy
-    engine uses.
+    token being drawn (``fold_in(key(seed), step)`` seeds the row's
+    noise).  Returns (B,) int32.  Rows with ``temperature <= 0`` return
+    the plain ``argmax`` (greedy), computed by the identical expression
+    the greedy engine uses.
     """
-    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    vocab = logits.shape[-1]
-    # temperature scale (greedy rows' scale is irrelevant — masked out by
-    # the final where — but must stay finite for the math to be safe)
-    temp = jnp.maximum(temperature, 1e-6)[:, None]
-    scaled = logits.astype(jnp.float32) / temp
-    order = jnp.sort(scaled, axis=-1)[:, ::-1]          # descending
-    # top-k: keep the k highest-scoring tokens (0 => whole vocab)
-    k = jnp.clip(jnp.where(top_k > 0, top_k, vocab), 1, vocab)
-    kth = jnp.take_along_axis(order, (k - 1)[:, None], axis=-1)
-    scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
-    # top-p over the top-k-filtered distribution: keep the smallest
-    # high-probability set whose mass reaches top_p (the token that
-    # crosses the threshold is kept, so the set is never empty)
-    order = jnp.where(order < kth, -jnp.inf, order)
-    probs = jax.nn.softmax(order, axis=-1)
-    exclusive = jnp.cumsum(probs, axis=-1) - probs
-    keep = exclusive < top_p[:, None]
-    thresh = jnp.min(jnp.where(keep, order, jnp.inf), axis=-1)
-    scaled = jnp.where(scaled < thresh[:, None], -jnp.inf, scaled)
+    cands = min(SAMPLE_CANDIDATES, logits.shape[-1])
 
-    def draw(s, i, row):
+    def noise(s, i):
         key = jax.random.fold_in(jax.random.PRNGKey(s), i)
-        return jax.random.categorical(key, row)
+        return jax.random.gumbel(key, (cands,), jnp.float32)
 
-    sampled = jax.vmap(draw)(seed, step, scaled).astype(jnp.int32)
-    return jnp.where(temperature > 0, sampled, greedy)
+    gumbel = jax.vmap(noise)(seed, step)
+    return ops.fused_sample(logits, temperature, top_k, top_p, gumbel,
+                            impl=impl)

@@ -277,6 +277,68 @@ def test_cancel_preserves_prefix_cache_refcounts(engine):
 
 
 # ---------------------------------------------------------------------------
+# AOT warmup
+# ---------------------------------------------------------------------------
+
+def test_client_warmup_default_off(engine):
+    assert make_client(engine).warmup_stats is None
+
+
+def test_warmup_aot_kills_first_hit_compiles():
+    """warmup=True compiles every reachable serving variant up front: no
+    submit after construction triggers a JIT, greedy streams stay
+    bit-identical, seeded sampling stays reproducible, and the warm-up
+    rounds leave zero residue in the block pool / KV slab / telemetry."""
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.key(0))
+    eng = InferenceEngine(cfg, params, ladder=BucketLadder(
+        seq_buckets=(32, 64), batch_buckets=(1, 2, 4)))
+    backend = ContinuousEngine(eng, max_slots=4, cap_new=16)
+    client = TurboClient(backend, cost_model=CM, warmup=True)
+    stats = client.warmup_stats
+    assert stats is not None
+    assert stats["compile_count"] >= 1 and stats["rounds"] >= 3
+    assert stats["warmup_seconds"] > 0
+    # warmup left the engine spotless
+    assert backend.block_table.used_blocks == 0
+    assert eng.kv_slab.live_bytes == 0
+    assert backend.prefill_tokens == 0 and backend.decode_ticks == 0
+    # the 0-compile serving window: greedy AND sampled admissions of
+    # fresh shapes reuse warm executables
+    compiles = eng.compile_count
+    p = GenerationParams(max_new_tokens=6, temperature=0.9, top_p=0.95,
+                         seed=3)
+    hg = client.submit([1, 2, 3], GenerationParams(max_new_tokens=6))
+    hs = client.submit([9, 8], p)
+    greedy = hg.result()
+    s1 = hs.result()
+    assert eng.compile_count == compiles
+    # ...and the functional contracts survived the warm rounds
+    assert greedy == eng.generate([[1, 2, 3]], max_new_tokens=6)[0]
+    assert client.submit([9, 8], p).result() == s1
+
+
+def test_warmup_preserves_prefix_cache(engine):
+    """Warm rounds must not pollute the radix prefix cache: after a
+    warmed-up construction the cache is empty and still functional."""
+    eng_cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(eng_cfg, jax.random.key(0))
+    eng = InferenceEngine(eng_cfg, params, ladder=BucketLadder(
+        seq_buckets=(32,), batch_buckets=(1, 2)))
+    backend = ContinuousEngine(eng, max_slots=2, cap_new=8,
+                               prefix_cache=True)
+    client = TurboClient(backend, cost_model=CM, warmup=True)
+    assert backend.prefix_cache is not None
+    assert backend.prefix_cache.cached_blocks == 0
+    sys_prompt = list(range(3, 3 + 16))
+    client.submit(sys_prompt + [7],
+                  GenerationParams(max_new_tokens=2)).result()
+    h = client.submit(sys_prompt + [9], GenerationParams(max_new_tokens=2))
+    h.result()
+    assert backend.prefix_stats()["hits"] >= 1
+
+
+# ---------------------------------------------------------------------------
 # Simulator parity: the same API over the virtual clock
 # ---------------------------------------------------------------------------
 

@@ -184,6 +184,82 @@ def test_chunked_virtual_runs_are_reproducible():
         == [(r.req_id, round(r.finish_time, 12)) for r in b.responses]
 
 
+def test_fused_chunk_decode_advances_both_in_one_tick():
+    """Decode-fused chunks: on a chunk turn with decodes in flight, the
+    decode batch advances IN THE SAME TICK (one dispatch), so chunking
+    a long prompt no longer costs the decode batch a stalled tick."""
+    cfg = SimConfig(policy="dp", chunked_prefill=True,
+                    prefill_chunk_tokens=16)
+    pipe, _ = _virtual_pipeline(cfg)
+    a = Session(0, 10, 0.0, max_new_tokens=32)
+    pipe.submit(a)
+    pipe.tick()
+    b = Session(1, 100, 0.0, max_new_tokens=4)
+    pipe.submit(b)
+    pipe.tick()                           # chunked admission (unfused)
+    assert b.prefilled_tokens == 16
+    pipe.tick()                           # decode turn
+    ticks0 = pipe.stats.decode_ticks
+    toks0 = a.tokens_emitted
+    pipe.tick()                           # fused chunk turn
+    assert b.prefilled_tokens == 32       # chunk advanced...
+    assert pipe.stats.decode_ticks == ticks0 + 1   # ...and so did decode
+    assert a.tokens_emitted == toks0 + 1
+    pipe.drain()
+    assert a.is_finished and b.is_finished
+
+
+def test_final_chunk_never_fuses():
+    """The final chunk splices a fresh decode row; fusing it would
+    advance that row before its first timestamped tick.  The tick that
+    completes the prompt must not also be a decode tick."""
+    cfg = SimConfig(policy="dp", chunked_prefill=True,
+                    prefill_chunk_tokens=16)
+    pipe, _ = _virtual_pipeline(cfg)
+    a = Session(0, 10, 0.0, max_new_tokens=64)
+    pipe.submit(a)
+    pipe.tick()
+    b = Session(1, 100, 0.0, max_new_tokens=4)
+    pipe.submit(b)
+    while b.prefilled_tokens < b.seq_len:
+        before = pipe.stats.decode_ticks
+        prefilled = b.prefilled_tokens
+        pipe.tick()
+        if b.prefilled_tokens == b.seq_len and prefilled < b.seq_len:
+            assert pipe.stats.decode_ticks == before   # final: unfused
+    pipe.drain()
+    assert b.tokens_emitted == 4
+
+
+def test_fused_off_restores_strict_alternation():
+    """fused_chunk_decode=False: chunk turns do chunk work only — the
+    pre-fusion cadence — and results are unchanged either way."""
+    def run(fused):
+        cfg = SimConfig(policy="dp", chunked_prefill=True,
+                        prefill_chunk_tokens=16,
+                        fused_chunk_decode=fused)
+        pipe, clock = _virtual_pipeline(cfg)
+        a = Session(0, 10, 0.0, max_new_tokens=24)
+        pipe.submit(a)
+        pipe.tick()
+        b = Session(1, 100, 0.0, max_new_tokens=4)
+        pipe.submit(b)
+        pipe.drain()
+        return pipe, clock, a, b
+
+    pipe_f, clock_f, a_f, b_f = run(True)
+    pipe_u, clock_u, a_u, b_u = run(False)
+    for x in (a_f, b_f, a_u, b_u):
+        assert x.is_finished
+    assert a_f.tokens_emitted == a_u.tokens_emitted == 24
+    assert b_f.tokens_emitted == b_u.tokens_emitted == 4
+    # unfused: every chunk tick stalls the decode batch, so draining
+    # takes strictly longer on the virtual clock (saved dispatch
+    # overhead + no lost decode progress during the chunk window)
+    assert clock_f.now < clock_u.now
+    assert pipe_u.stats.chunk_ticks == pipe_f.stats.chunk_ticks
+
+
 def test_chunked_one_shot_long_prompt_finishes_at_final_chunk():
     cfg = SimConfig(policy="dp", chunked_prefill=True,
                     prefill_chunk_tokens=16)
@@ -300,7 +376,8 @@ def engine():
         seq_buckets=(32, 64), batch_buckets=(1, 2, 4)))
 
 
-def _serve(engine, chunked: bool, prefix_cache: bool = False):
+def _serve(engine, chunked: bool, prefix_cache: bool = False,
+           fused: bool = True):
     long_prompt = [(i * 7) % 50 + 2 for i in range(40)]
     specs = [([1, 2, 3], 10), (list(long_prompt), 6), ([9, 8, 7], 8)]
     ce = ContinuousEngine(engine, max_slots=4, cap_new=16,
@@ -309,7 +386,8 @@ def _serve(engine, chunked: bool, prefix_cache: bool = False):
                          config=ServingConfig(policy="dp",
                                               max_batch_size=4,
                                               chunked_prefill=chunked,
-                                              prefill_chunk_tokens=16))
+                                              prefill_chunk_tokens=16,
+                                              fused_chunk_decode=fused))
     sessions = [Session(i, len(p), 0.0, prompt=list(p), max_new_tokens=m)
                 for i, (p, m) in enumerate(specs)]
     sys_.submit(sessions[0])
@@ -344,6 +422,19 @@ def test_real_engine_chunked_tokens_identical(engine):
     # it only spliced into decode after its final chunk
     s = sessions[1]
     assert s.prefilled_tokens == s.seq_len
+
+
+def test_real_engine_fused_chunk_decode_matches_unfused(engine):
+    """Fusing the chunk pass with the decode tick on the real engine
+    changes dispatch grouping only — every generated token is identical
+    to the unfused chunked run (and hence the unchunked baseline)."""
+    fused, fstats, _ = _serve(engine, chunked=True, fused=True)
+    unfused, ustats, _ = _serve(engine, chunked=True, fused=False)
+    assert fused == unfused
+    assert fstats.chunked_prefills == ustats.chunked_prefills == 1
+    # fusion folds decode progress into chunk turns: the fused schedule
+    # needs no more decode-only ticks than the unfused one
+    assert fstats.decode_ticks <= ustats.decode_ticks
 
 
 def test_real_engine_chunked_decode_advances_between_chunks(engine):

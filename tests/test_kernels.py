@@ -216,6 +216,133 @@ def test_flash_decode_paged_kernel(b, h, kv, dh, bs, mb, nb, splits,
                                np.asarray(contiguous, np.float32), **tol)
 
 
+# ---------------------------------------------------------------------------
+# fused sampling
+# ---------------------------------------------------------------------------
+
+def _sampling_inputs(rows, cols, key, temps, ks, ps):
+    """Per-row params cycling through the given grids + shared Gumbel
+    noise drawn exactly the way runtime.sampling draws it."""
+    keys = jax.random.split(jax.random.key(key), 2)
+    logits = 4.0 * jax.random.normal(keys[0], (rows, cols))
+    temperature = jnp.array([temps[i % len(temps)] for i in range(rows)],
+                            jnp.float32)
+    top_k = jnp.array([ks[i % len(ks)] for i in range(rows)], jnp.int32)
+    top_p = jnp.array([ps[i % len(ps)] for i in range(rows)], jnp.float32)
+    cands = min(64, cols)
+    gumbel = jax.random.gumbel(keys[1], (rows, cands), jnp.float32)
+    return logits, temperature, top_k, top_p, gumbel
+
+
+@pytest.mark.parametrize("rows,cols", [(1, 64), (4, 256), (8, 1000),
+                                       (33, 128), (5, 37)])
+def test_sample_kernel_parity(rows, cols):
+    """Interpret-mode kernel vs the jnp oracle: identical token ids for
+    every mix of greedy/sampled rows and top-k/top-p settings (0
+    disables k; k > C and p = 1.0 exercise the truncation edges)."""
+    logits, t, k, p, g = _sampling_inputs(
+        rows, cols, rows * cols, temps=(0.0, 0.7, 1.3),
+        ks=(0, 1, 5, 64, 10_000), ps=(0.3, 0.95, 1.0))
+    want = ops.fused_sample(logits, t, k, p, g, impl="xla")
+    got = ops.fused_sample(logits, t, k, p, g, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.dtype == jnp.int32
+
+
+def test_sample_greedy_rows_match_argmax():
+    """temperature <= 0 rows take the exact argmax regardless of the
+    noise or filter params — the greedy-stream bit-identity contract."""
+    logits, _, k, p, g = _sampling_inputs(16, 512, 3, temps=(0.0,),
+                                          ks=(0, 3), ps=(0.5, 1.0))
+    t = jnp.zeros((16,), jnp.float32)
+    want = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for impl in ("xla", "interpret"):
+        got = ops.fused_sample(logits, t, k, p, g, impl=impl)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sample_topk1_is_greedy():
+    """top_k = 1 collapses the candidate set to the argmax: sampled rows
+    become deterministic greedy rows whatever the temperature/noise."""
+    logits, _, _, _, g = _sampling_inputs(12, 300, 9, temps=(1.0,),
+                                          ks=(1,), ps=(1.0,))
+    t = jnp.full((12,), 0.9, jnp.float32)
+    k = jnp.ones((12,), jnp.int32)
+    p = jnp.ones((12,), jnp.float32)
+    want = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for impl in ("xla", "interpret"):
+        got = ops.fused_sample(logits, t, k, p, g, impl=impl)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sample_tiny_topp_is_greedy():
+    """A nucleus smaller than the top token's own mass keeps only the
+    top token (the exclusive-cumsum mask never drops rank 0)."""
+    logits, _, _, _, g = _sampling_inputs(8, 128, 11, temps=(0.8,),
+                                          ks=(0,), ps=(1.0,))
+    t = jnp.full((8,), 0.8, jnp.float32)
+    k = jnp.zeros((8,), jnp.int32)
+    p = jnp.full((8,), 1e-6, jnp.float32)
+    want = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for impl in ("xla", "interpret"):
+        got = ops.fused_sample(logits, t, k, p, g, impl=impl)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sample_one_hot_logits():
+    """A one-hot row (one finite spike) must return the spike for every
+    param combination — sampled or greedy."""
+    rows, cols = 10, 200
+    hot = np.arange(3, 3 + rows * 7, 7) % cols
+    logits = np.full((rows, cols), -30.0, np.float32)
+    logits[np.arange(rows), hot] = 30.0
+    logits = jnp.asarray(logits)
+    t = jnp.array([0.0, 0.5, 1.0, 1.5, 0.7] * 2, jnp.float32)
+    k = jnp.array([0, 1, 4, 64, 7] * 2, jnp.int32)
+    p = jnp.array([0.1, 0.9, 1.0, 0.5, 0.99] * 2, jnp.float32)
+    g = jax.random.gumbel(jax.random.key(0), (rows, 64), jnp.float32)
+    for impl in ("xla", "interpret"):
+        got = ops.fused_sample(logits, t, k, p, g, impl=impl)
+        np.testing.assert_array_equal(np.asarray(got), hot)
+
+
+@pytest.mark.parametrize("rows,block_rows", [(33, 8), (5, 0), (100, 16)])
+def test_sample_rows_not_multiple_of_block(rows, block_rows):
+    """Ragged tail blocks (rows not tiling the grid) must still match
+    the oracle token-for-token."""
+    logits, t, k, p, g = _sampling_inputs(
+        rows, 96, rows + 1, temps=(0.0, 1.1), ks=(0, 2), ps=(0.9, 1.0))
+    want = ops.fused_sample(logits, t, k, p, g, impl="xla")
+    got = ops.fused_sample(logits, t, k, p, g, impl="interpret",
+                           block_rows=block_rows)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sample_tokens_reproducible_and_batch_independent():
+    """The runtime wrapper's PRNG contract: same (seed, step) -> same
+    token, independent of batch composition or row position."""
+    from repro.runtime.sampling import sample_tokens
+    v = 256
+    logits = 3.0 * jax.random.normal(jax.random.key(42), (4, v))
+    logits = logits.at[2].set(logits[0])   # rows 0/2: identical draws
+    t = jnp.full((4,), 0.8, jnp.float32)
+    k = jnp.zeros((4,), jnp.int32)
+    p = jnp.full((4,), 0.95, jnp.float32)
+    seed = jnp.array([7, 9, 7, 11], jnp.int32)
+    step = jnp.array([0, 3, 0, 5], jnp.int32)
+    a = sample_tokens(logits, temperature=t, top_k=k, top_p=p, seed=seed,
+                      step=step)
+    b = sample_tokens(logits, temperature=t, top_k=k, top_p=p, seed=seed,
+                      step=step)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # rows 0 and 2 share logits/params/seed/step -> same token
+    assert int(a[0]) == int(a[2])
+    # a row alone draws the same token it drew co-batched
+    solo = sample_tokens(logits[1:2], temperature=t[1:2], top_k=k[1:2],
+                         top_p=p[1:2], seed=seed[1:2], step=step[1:2])
+    assert int(solo[0]) == int(a[1])
+
+
 def test_flash_matches_model_chunked_attention():
     """The kernel agrees with the model's XLA chunked-attention path."""
     from repro.configs import get_smoke_config
