@@ -44,7 +44,7 @@ def run() -> None:
     plan_times = []
     peak = {"turbo": 0, "caching": 0, "gsoc": 0}
     print("# Fig 11 trace: req_len turbo_MB caching_MB gsoc_MB")
-    for i, seq in enumerate(lengths):
+    for seq in lengths:
         recs = records_at(seq)
         # production path: the paper's repeated-structure trick (§6.2.2)
         # plans one block and reuses offsets across the other 11

@@ -85,6 +85,7 @@ def run() -> None:
     lengths = jnp.full((64,), 100, jnp.int32)
     got = ops.fused_softmax(x, lengths, scale=0.125, impl="interpret")
     want = ref.softmax_ref(x, lengths, 0.125)
+    # turbolint: allow-sync(one-shot parity-check readback)
     err = float(jnp.max(jnp.abs(got - want)))
     emit("softmax_pallas_interpret_check", 0.0, f"max_err={err:.2e}")
     assert err < 1e-5

@@ -12,12 +12,12 @@ def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 2
     """Median wall-time of a jitted callable, in seconds."""
     for _ in range(warmup):
         out = fn(*args)
-        jax.block_until_ready(out)
+        jax.block_until_ready(out)  # turbolint: allow-sync(benchmark timing barrier)
     times = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         out = fn(*args)
-        jax.block_until_ready(out)
+        jax.block_until_ready(out)  # turbolint: allow-sync(benchmark timing barrier)
         times.append(time.perf_counter() - t0)
     times.sort()
     return times[len(times) // 2]

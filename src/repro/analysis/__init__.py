@@ -1,0 +1,18 @@
+"""repro.analysis — repo-specific correctness tooling.
+
+Two coordinated halves guard the serving hot path:
+
+- **turbolint** (`python -m repro.analysis.lint`): AST-based static
+  checks — host-sync, recompile-hazard, lock-discipline, and
+  kernel-parity rules, configured by `turbolint.toml` at the repo root.
+  See `src/repro/analysis/README.md` for each rule and the suppression
+  comment grammar.
+- the **runtime sanitizer** (`repro.runtime.sanitizer`): shadow
+  ownership/refcount tracking over the paged-KV block pool plus
+  tick-boundary pipeline invariants, enabled by ``TURBO_SANITIZE=1``
+  (default-on under pytest).
+"""
+from repro.analysis.config import LintConfig, load_config
+from repro.analysis.rules import Finding
+
+__all__ = ["Finding", "LintConfig", "load_config"]

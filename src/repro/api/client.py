@@ -216,6 +216,7 @@ class TurboClient:
                   init_seed: int = 0,
                   auto_pump: Union[str, bool] = "sync",
                   warmup: bool = True,
+                  sample_candidates: Optional[int] = None,
                   **backend_kw) -> "TurboClient":
         """Build the whole serving stack from an arch name: reduced
         (``smoke=True``) or full config, fresh params, a bucketed
@@ -231,7 +232,8 @@ class TurboClient:
         params = init_params(cfg, jax.random.key(init_seed))
         engine = InferenceEngine(cfg, params, ladder=BucketLadder(
             seq_buckets=tuple(seq_buckets),
-            batch_buckets=tuple(batch_buckets)))
+            batch_buckets=tuple(batch_buckets)),
+            sample_candidates=sample_candidates)
         backend = ContinuousEngine(engine, max_slots=max_slots,
                                    cap_new=cap_new,
                                    prefix_cache=prefix_cache,
@@ -306,7 +308,10 @@ class TurboClient:
         """Pump everything to completion; returns sessions finished
         across the whole run so far."""
         self.pump()
-        return list(self.pipeline.finished)
+        # snapshot under the lock: with auto_pump="thread" the pump
+        # thread appends to `finished` concurrently
+        with self._cv:
+            return list(self.pipeline.finished)
 
     def _advance(self, handle: RequestHandle) -> None:
         """One step of progress on behalf of a blocked handle."""

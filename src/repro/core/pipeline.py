@@ -38,12 +38,16 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cost_model import CostModel, chunk_tokens_for_budget
 from repro.core.scheduler import (BatchPlan, dp_schedule, naive_schedule,
                                   nobatch_schedule)
 from repro.runtime.session import Session, SessionState
+
+# NOTE: repro.runtime.sanitizer is imported lazily (it subclasses
+# kv_cache.BlockTableManager, and kv_cache -> core.cost_model ->
+# core/__init__ -> this module would make the import circular).
 
 
 def plan_for_policy(policy: str, lengths: Sequence[int], cost: CostModel,
@@ -156,6 +160,15 @@ class PipelineBackend:
         self.prefill_chunk(session, upto)
         self.decode_tick(decoding)
 
+    # -- invariant checking (optional capability) ------------------------
+    def check_invariants(self, pipeline: "ServingPipeline") -> None:
+        """Sanitizer hook, called at every tick boundary when the
+        sanitizer is enabled (see `repro.runtime.sanitizer`).  Backends
+        with internal accounting (block pools, decode slots, reservation
+        ledgers) should cross-check it against the pipeline's view of the
+        live set and raise `SanitizerError` on divergence.  Default:
+        nothing to check."""
+
     # -- cancellation (optional capability) ------------------------------
     def cancel_session(self, session: Session) -> None:
         """Tear down a mid-DECODE session immediately: free its KV
@@ -246,6 +259,12 @@ class ServingPipeline:
         # req-id composition of every executed prefill batch, in dispatch
         # order — lets tests assert real-vs-virtual scheduling equivalence
         self.batch_log: List[Tuple[int, ...]] = []
+        # sanitizer state: per-session `streamed` high-water marks,
+        # checked monotonic at every tick boundary (TURBO_SANITIZE /
+        # pytest default — see repro.runtime.sanitizer)
+        from repro.runtime import sanitizer
+        self._sanitize = sanitizer.enabled()
+        self._stream_hwm: Dict[int, int] = {}
 
     # ------------------------------------------------------------------
     # Admission control
@@ -287,6 +306,7 @@ class ServingPipeline:
         self.stats.cancelled += 1
         self.finished.append(session)
         self._deliver_tokens([session])
+        self._stream_hwm.pop(session.req_id, None)
         return True
 
     def _decoding(self) -> List[Session]:
@@ -478,7 +498,37 @@ class ServingPipeline:
             del s.token_times[len(s.generated):]
         self.finished.extend(done)
         self._deliver_tokens(done)
+        if self._sanitize:
+            self._check_invariants(done)
         return done
+
+    def _check_invariants(self, done: List[Session]) -> None:
+        """Tick-boundary sanitizer checks: monotonic `streamed` delivery
+        high-water marks (a regression would re-deliver tokens; an
+        overshoot would deliver tokens that do not exist), then the
+        backend's own accounting cross-check (block conservation,
+        slot<->session bijection, reservation balance — see
+        `ContinuousEngine.check_invariants`)."""
+        from repro.runtime.sanitizer import SanitizerError
+        for s in self.live + self.chunking + done:
+            prev = self._stream_hwm.get(s.req_id, 0)
+            if s.streamed < prev:
+                raise SanitizerError(
+                    f"session {s.req_id} streamed high-water regressed "
+                    f"{prev} -> {s.streamed}: tokens would be delivered "
+                    "twice")
+            if s.streamed > len(s.generated):
+                raise SanitizerError(
+                    f"session {s.req_id} streamed {s.streamed} of only "
+                    f"{len(s.generated)} generated tokens")
+            self._stream_hwm[s.req_id] = s.streamed
+        for s in done:
+            self._stream_hwm.pop(s.req_id, None)
+        # Duck-typed: test doubles implement the backend protocol
+        # structurally and may predate this hook.
+        check = getattr(self.backend, "check_invariants", None)
+        if check is not None:
+            check(self)
 
     def _deliver_tokens(self, done: List[Session]) -> None:
         """Hand every freshly host-visible token to the emission

@@ -160,7 +160,7 @@ def _dot_flops(ins: Instr, comp: Computation) -> float:
     if ins.opcode not in ("dot", "convolution"):
         return 0.0
     result_elems = 0
-    for dt, shape in ins.result_shapes:
+    for _dt, shape in ins.result_shapes:
         n = 1
         for d in shape:
             n *= d

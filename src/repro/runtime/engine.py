@@ -39,12 +39,13 @@ from repro.models import (ModelRuntime, DEFAULT_RUNTIME, decode_step,
                           forward_hidden, make_cache, make_paged_cache,
                           prefill, prefill_suffix)
 from repro.models.layers import lm_logits
+from repro.runtime import sanitizer
 from repro.runtime.bucketing import BucketLadder
 from repro.runtime.kv_cache import (DEFAULT_KV_BLOCK, BlockExhausted,
                                     BlockTableManager, KVSlabManager,
                                     kv_bytes_per_token, ssm_state_bytes)
 from repro.runtime.prefix_cache import PrefixMatch, RadixPrefixCache
-from repro.runtime.sampling import sample_tokens
+from repro.runtime.sampling import DEFAULT_SAMPLE_CANDIDATES, sample_tokens
 from repro.runtime.session import GenerationParams, Session
 
 # cache pytree leaves whose batch axis is 0 (everything else batches on
@@ -98,12 +99,22 @@ class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params: Any,
                  rt: ModelRuntime = DEFAULT_RUNTIME,
                  ladder: BucketLadder = BucketLadder(),
-                 pad_id: int = 0) -> None:
+                 pad_id: int = 0,
+                 sample_candidates: Optional[int] = None) -> None:
         self.cfg = cfg
         self.params = params
         self.rt = rt
         self.ladder = ladder
         self.pad_id = pad_id
+        # fused-sampler candidate-set size: the sampling tick masks and
+        # draws over only the top-`sample_candidates` logits per row (a
+        # compile-time shape, fixed per engine — see runtime/sampling.py)
+        if sample_candidates is None:
+            sample_candidates = DEFAULT_SAMPLE_CANDIDATES
+        if sample_candidates < 1:
+            raise ValueError(f"sample_candidates must be >= 1, got "
+                             f"{sample_candidates}")
+        self.sample_candidates = sample_candidates
         self.kv_slab = KVSlabManager()
         self._classify_cache: Dict[Tuple[int, int], Callable] = {}
         self._prefill_cache: Dict[Tuple[int, int, int], Callable] = {}
@@ -159,6 +170,7 @@ class InferenceEngine:
         key = ("tick", tok_ndim, sampling)
         if key not in self._decode_cache:
             cfg, rt = self.cfg, self.rt
+            cands = self.sample_candidates
 
             @partial(jax.jit, donate_argnums=(1, 2, 3, 4, 5))
             def tick(params, cache, cur, emitted, counts, done, budget,
@@ -169,7 +181,8 @@ class InferenceEngine:
                 if sampling and tok_ndim == 1:
                     nxt = sample_tokens(logits, temperature=temp,
                                         top_k=top_k, top_p=top_p,
-                                        seed=seed, step=counts)
+                                        seed=seed, step=counts,
+                                        candidates=cands)
                 else:
                     nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 tok = nxt if nxt.ndim == 1 else nxt[:, 0]
@@ -255,6 +268,7 @@ class InferenceEngine:
         toks, last, seq_b, batch_b = self._pad_batch(token_lists)
         fn = self._classify_fn(seq_b, batch_b)
         logits = fn(self.params, toks, last)
+        # turbolint: allow-sync(one-shot classification returns host ints)
         preds = np.asarray(jnp.argmax(logits, axis=-1))
         return [int(preds[i]) for i in range(len(token_lists))]
 
@@ -355,7 +369,8 @@ class InferenceEngine:
             # first generated token: drawn at step 0 with the row's key
             cur = sample_tokens(
                 logits, temperature=temp, top_k=top_k, top_p=top_p,
-                seed=seed, step=jnp.zeros((batch_b,), jnp.int32))
+                seed=seed, step=jnp.zeros((batch_b,), jnp.int32),
+                candidates=self.sample_candidates)
         else:
             cur = greedy
         tok0 = cur if cur.ndim == 1 else cur[:, 0]
@@ -450,8 +465,8 @@ class InferenceEngine:
     def read_out(self, state: GenState,
                  token_lists: Sequence[Sequence[int]]) -> List[List[int]]:
         """ONE host transfer for the whole batch: prompt + emitted."""
-        em = np.asarray(state.emitted)
-        cnt = np.asarray(state.counts)
+        em = np.asarray(state.emitted)    # turbolint: allow-sync(final flush)
+        cnt = np.asarray(state.counts)    # turbolint: allow-sync(final flush)
         return [list(t) + [int(x) for x in em[i, :cnt[i]]]
                 for i, t in enumerate(token_lists)]
 
@@ -511,6 +526,7 @@ class InferenceEngine:
         outs = [list(t) for t in token_lists]
         cache, cur = state.cache, state.cur
         for _ in range(max_new_tokens):
+            # turbolint: allow-sync(deliberate per-token baseline for benchmarks)
             cur_np = np.asarray(cur)
             for i in range(len(token_lists)):
                 outs[i].append(int(cur_np[i].reshape(-1)[0]))
@@ -623,8 +639,8 @@ class ContinuousEngine(PipelineBackend):
                                  f"block_size {block_size}")
             self.max_blocks = max_len // block_size
             if num_blocks is not None:
-                self.block_table = BlockTableManager(num_blocks,
-                                                     block_size)
+                self.block_table = sanitizer.make_block_manager(
+                    num_blocks, block_size)
                 if prefix_cache:
                     self.prefix_cache = RadixPrefixCache(self.block_table)
             # num_blocks=None: the pool is sized at the FIRST prefill to
@@ -738,6 +754,71 @@ class ContinuousEngine(PipelineBackend):
             raise ValueError(
                 f"session {session.req_id}: prompt+budget="
                 f"{session.total_len} exceeds max_len {ceiling}")
+
+    def check_invariants(self, pipeline) -> None:
+        """Sanitizer cross-check of engine accounting against the
+        pipeline's live set, run at every tick boundary when the
+        sanitizer is enabled (see `repro.runtime.sanitizer`):
+
+        - slot<->session bijection: every pipeline-live session occupies
+          the slot it claims, no slot is shared, and no occupied slot
+          holds a session the pipeline no longer tracks;
+        - chunk-slot ledger matches the pipeline's chunking queue;
+        - block conservation + shadow refcount agreement (paged pool);
+        - reservation balance: reserved blocks never exceed the free
+          list, and every reservation belongs to a live session;
+        - leak check at idle: with nothing in flight, every used block
+          must be accounted for by the prefix cache.
+        """
+        seen_slots: Dict[int, int] = {}
+        for s in pipeline.live:
+            slot = s.slot
+            if not 0 <= slot < self.max_slots or \
+                    self.sessions[slot] is not s:
+                raise sanitizer.SanitizerError(
+                    f"slot<->session bijection broken: live session "
+                    f"{s.req_id} claims slot {slot} but the engine maps "
+                    "it elsewhere")
+            if slot in seen_slots:
+                raise sanitizer.SanitizerError(
+                    f"slot {slot} shared by sessions "
+                    f"{seen_slots[slot]} and {s.req_id}")
+            seen_slots[slot] = s.req_id
+        occupied = {i for i, s in enumerate(self.sessions)
+                    if s is not None}
+        stray = occupied - set(seen_slots)
+        if stray:
+            held = [self.sessions[i].req_id for i in sorted(stray)]
+            raise sanitizer.SanitizerError(
+                f"slots {sorted(stray)} hold sessions {held} the "
+                "pipeline no longer tracks")
+        chunk_reqs = {s.req_id for s in pipeline.chunking}
+        if set(self._chunk_slots) != chunk_reqs:
+            raise sanitizer.SanitizerError(
+                f"chunk-slot ledger {sorted(self._chunk_slots)} does not "
+                f"match the pipeline's chunking queue "
+                f"{sorted(chunk_reqs)}")
+        btm = self.block_table
+        if btm is None:
+            return
+        resv = sum(self._reserved.values())
+        if resv > btm.free_blocks:
+            raise sanitizer.SanitizerError(
+                f"reservation balance broken: {resv} blocks reserved "
+                f"but only {btm.free_blocks} free")
+        allowed = {s.req_id for s in pipeline.live} | chunk_reqs
+        stray_resv = set(self._reserved) - allowed
+        if stray_resv:
+            raise sanitizer.SanitizerError(
+                f"reservations held for sessions {sorted(stray_resv)} "
+                "that are neither live nor chunking")
+        if isinstance(btm, sanitizer.SanitizedBlockTableManager):
+            btm.check_conservation()
+            if pipeline.idle():
+                cache_blocks = self.prefix_cache.cached_blocks \
+                    if self.prefix_cache is not None else 0
+                btm.check_idle(live_requests=(),
+                               cache_blocks=cache_blocks)
 
     def prefill_batch(self, sessions: List[Session],
                       padded_len: int) -> None:
@@ -908,7 +989,9 @@ class ContinuousEngine(PipelineBackend):
                   if s is not None and s.stream]
         if not wanted:
             return
+        # turbolint: allow-sync(per-tick streaming flush for stream=True rows)
         counts = np.asarray(self.state.counts)
+        # turbolint: allow-sync(per-tick streaming flush for stream=True rows)
         emitted = np.asarray(self.state.emitted)
         for slot, s in wanted:
             s.generated = [int(x) for x in emitted[slot, :counts[slot]]]
@@ -1163,6 +1246,9 @@ class ContinuousEngine(PipelineBackend):
             sampling=[session.params])
         bids = btm.block_table(req)
         bs = self.block_size
+        # sanitizer: the chunk scatters into exactly these blocks
+        sanitizer.check_write(btm, req,
+                              bids[off // bs:(upto - 1) // bs + 1])
         st = self.state
         cache = dict(st.cache)
         k_pool, v_pool = cache["k"], cache["v"]
@@ -1232,7 +1318,9 @@ class ContinuousEngine(PipelineBackend):
             raise ValueError(f"session {session.req_id} holds no decode "
                              "slot")
         st = self.state
+        # turbolint: allow-sync(cancellation reads the partial result once)
         counts = int(np.asarray(st.counts[slot]))
+        # turbolint: allow-sync(cancellation reads the partial result once)
         emitted = np.asarray(st.emitted[slot])
         session.generated = [int(x) for x in emitted[:counts]]
         self.engine.kv_slab.free(session.req_id)
@@ -1279,7 +1367,7 @@ class ContinuousEngine(PipelineBackend):
                     # lazy pool: max_slots x this admission's bucket of
                     # blocks (+ trash) — workload-derived capacity that
                     # any mix of sequence lengths up to max_len shares
-                    self.block_table = BlockTableManager(
+                    self.block_table = sanitizer.make_block_manager(
                         B * (need_len // self.block_size) + 1,
                         self.block_size)
                 if self._prefix_enabled and self.prefix_cache is None:
@@ -1476,6 +1564,9 @@ class ContinuousEngine(PipelineBackend):
             # scatter ONLY the uncached suffix KV into this request's
             # blocks (flat pool indices; shared prefix blocks untouched)
             suffix_len = s.seq_len - cached
+            sanitizer.check_write(
+                btm, s.req_id,
+                bids[cached // bs:(s.seq_len - 1) // bs + 1])
             pos = np.arange(cached, s.seq_len)
             fidx = jnp.asarray(
                 np.asarray(bids, np.int32)[pos // bs] * bs + pos % bs)
@@ -1558,11 +1649,13 @@ class ContinuousEngine(PipelineBackend):
         loop moves no per-token data to the host."""
         self._since_sync = 0
         st = self.state
-        done = np.asarray(st.done)
+        done = np.asarray(st.done)    # turbolint: allow-sync(stop-flag flush)
         if not any(done[slot] for slot, s in enumerate(self.sessions)
                    if s is not None):
             return
+        # turbolint: allow-sync(finished rows only — the once-per-generation flush)
         counts = np.asarray(st.counts)
+        # turbolint: allow-sync(finished rows only — the once-per-generation flush)
         emitted = np.asarray(st.emitted)
         now = self.clock()
         freed_slots: List[int] = []

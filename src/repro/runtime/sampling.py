@@ -35,12 +35,17 @@ from repro.kernels import ops
 # Bounded candidate set per row (LightSeq-style, arxiv 2010.13887):
 # sampling only ever touches the top-C logits.  64 comfortably covers
 # practical top-k/top-p settings; the tail mass beyond it is noise.
-SAMPLE_CANDIDATES = 64
+# Config-driven per engine: `InferenceEngine(sample_candidates=...)`
+# threads an override into every `sample_tokens` call it compiles.
+DEFAULT_SAMPLE_CANDIDATES = 64
+# Back-compat alias (pre-knob name).
+SAMPLE_CANDIDATES = DEFAULT_SAMPLE_CANDIDATES
 
 
 def sample_tokens(logits: jax.Array, *, temperature: jax.Array,
                   top_k: jax.Array, top_p: jax.Array, seed: jax.Array,
-                  step: jax.Array, impl: str = "auto") -> jax.Array:
+                  step: jax.Array, impl: str = "auto",
+                  candidates: int = 0) -> jax.Array:
     """One token per row from per-row sampling params.
 
     logits: (B, V) float; temperature/top_p: (B,) float; top_k: (B,)
@@ -49,8 +54,14 @@ def sample_tokens(logits: jax.Array, *, temperature: jax.Array,
     noise).  Returns (B,) int32.  Rows with ``temperature <= 0`` return
     the plain ``argmax`` (greedy), computed by the identical expression
     the greedy engine uses.
+
+    ``candidates`` bounds the per-row candidate set (the width of the
+    Gumbel noise handed to the kernel — a compile-time shape);
+    ``<= 0`` means :data:`DEFAULT_SAMPLE_CANDIDATES`.
     """
-    cands = min(SAMPLE_CANDIDATES, logits.shape[-1])
+    if candidates <= 0:
+        candidates = DEFAULT_SAMPLE_CANDIDATES
+    cands = min(candidates, logits.shape[-1])
 
     def noise(s, i):
         key = jax.random.fold_in(jax.random.PRNGKey(s), i)
