@@ -25,8 +25,26 @@ Every run writes a machine-readable trajectory to ``BENCH_serving.json``
 the file schema valid on every push; the paper-claim assertions only run
 at full scale.
 
-``BENCH_serving.json`` schema (``bench_serving/v6``).  ``streaming``
-section (real engine through the `repro.api` client)::
+``BENCH_serving.json`` schema (``bench_serving/v7``).  ``observability``
+section (real engine, the `repro.obs` registry + trace recorder)::
+
+    observability:
+      metrics:                   # full MetricsRegistry snapshot of the
+                                 # traced run (counters / gauges /
+                                 # histograms incl. pipeline.tick_seconds,
+                                 # kv.*, prefix.*, engine.*)
+      trace_events / trace_requests:  # recorder volume of the traced run
+      trace_complete_spans:      # every request span opens with enqueue
+                                 # and ends with exactly one terminal
+                                 # finish/cancel (asserted)
+      trace_file:                # Chrome-trace JSON exported for CI
+                                 # artifact upload (BENCH_trace.json)
+      tick_p50_ms_off / tick_p50_ms_on:  # median wall tick, observability
+                                 # disabled vs metrics+tracing on
+      tracing_overhead_ratio:    # on / off (asserted <= 1.05: recording
+                                 # host scalars must stay in the noise)
+
+``streaming`` section (real engine through the `repro.api` client)::
 
     streaming:
       requests / new_tokens:     # workload size
@@ -602,10 +620,112 @@ def bench_streaming(payload: dict,
     payload["streaming"] = section
 
 
+def bench_observability(payload: dict) -> None:
+    """Metrics/tracing cost and coverage on the real engine.
+
+    One workload served three ways over the same (pre-warmed) engine:
+    observability fully disabled, metrics-only (the default), and
+    metrics + trace recording.  Tick wall times are measured around
+    ``pipeline.tick()``; the on/off p50 ratio is the acceptance bound —
+    recording touches only host scalars already materialized at tick
+    boundaries, so it must stay within 5% of a disabled registry.  The
+    traced run's snapshot and Chrome-trace export land in the payload
+    (CI uploads ``BENCH_trace.json`` as an artifact)."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.core.pipeline import PipelineConfig, ServingPipeline
+    from repro.models import init_params
+    from repro.obs import (MetricsRegistry, Observability, TERMINAL_EVENTS,
+                           save_chrome_trace)
+    from repro.runtime import BucketLadder, InferenceEngine
+    from repro.runtime.engine import ContinuousEngine
+    from repro.runtime.session import Session
+
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.key(0))
+    eng = InferenceEngine(cfg, params, ladder=BucketLadder(
+        seq_buckets=(32, 64), batch_buckets=(1, 2, 4)))
+    cm = AnalyticCostModel(flops_per_token=1e6, bytes_per_token=1e3,
+                           weight_bytes=1e6, overhead=1e-4)
+    specs = [([1, 2, 3], 10), ([4, 5, 6, 7], 8), ([2] * 12, 12),
+             ([9, 8, 7], 6), ([5] * 20, 8), ([3, 1, 4, 1, 5], 10)]
+
+    def serve_once(obs):
+        pipe = ServingPipeline(
+            ContinuousEngine(eng, max_slots=4, cap_new=16),
+            cm, PipelineConfig(policy="dp", max_batch_size=4),
+            obs=obs)
+        for i, (p, m) in enumerate(specs):
+            pipe.submit(Session(i, len(p), pipe.clock(),
+                                prompt=list(p), max_new_tokens=m))
+        tick_walls = []
+        while not pipe.idle():
+            t0 = time.perf_counter()
+            pipe.tick()
+            tick_walls.append(time.perf_counter() - t0)
+        tick_walls.sort()
+        return pipe, tick_walls[len(tick_walls) // 2]
+
+    serve_once(Observability())                      # warm the compiles
+
+    def measure():
+        # interleaved min-of-5 per mode: a single ~1 ms tick p50 on a
+        # shared CPU is scheduler-noise-bound, and running all the off
+        # repeats before all the on repeats would fold machine-load
+        # drift into the ratio — alternate them instead
+        offs, runs = [], []
+        for _ in range(5):
+            offs.append(serve_once(Observability(
+                metrics=MetricsRegistry(enabled=False)))[1])
+            runs.append(serve_once(Observability.with_trace()))
+        p50_off = min(offs)
+        p50_on = min(r[1] for r in runs)
+        traced = min(runs, key=lambda r: r[1])[0]
+        ratio = p50_on / p50_off
+        assert ratio <= 1.05, \
+            f"tracing overhead {ratio:.3f}x exceeds the 1.05 bound"
+        return traced, p50_off, p50_on, ratio
+
+    # timing floor, not a correctness check: executables are warm, a
+    # re-measure is ~100 ms — retry before declaring a regression
+    for attempt in range(3):
+        try:
+            traced, p50_off, p50_on, ratio = measure()
+            break
+        except AssertionError:
+            if attempt == 2:
+                raise
+
+    rec = traced.obs.trace
+    req_ids = rec.request_ids()
+    complete = bool(req_ids) and all(
+        names[0] == "enqueue" and names[-1] in TERMINAL_EVENTS and
+        sum(1 for n in names if n in TERMINAL_EVENTS) == 1
+        for names in (rec.request_names(r) for r in req_ids))
+    assert complete, "every request span must end in exactly one terminal"
+    snap = traced.obs.metrics.snapshot()
+    assert snap["counters"]["pipeline.admitted"] == len(specs)
+    doc = save_chrome_trace(rec.events, "BENCH_trace.json")
+    payload["observability"] = {
+        "metrics": snap,
+        "trace_events": len(rec.events),
+        "trace_requests": len(req_ids),
+        "trace_complete_spans": complete,
+        "trace_file": "BENCH_trace.json",
+        "chrome_trace_events": len(doc["traceEvents"]),
+        "tick_p50_ms_off": p50_off * 1e3,
+        "tick_p50_ms_on": p50_on * 1e3,
+        "tracing_overhead_ratio": ratio,
+    }
+    emit("observability", 0.0,
+         f"tick_p50_{p50_off*1e3:.3f}to{p50_on*1e3:.3f}ms_"
+         f"ratio_{ratio:.3f}_{len(rec.events)}events")
+
+
 def run(smoke: bool = False, prefix_mix: float = 0.75,
         sample_candidates: Optional[int] = None) -> dict:
     payload = {
-        "schema": "bench_serving/v6",
+        "schema": "bench_serving/v7",
         "mode": "smoke" if smoke else "full",
         "throughput": {},
         "kv_footprint": {},
@@ -734,6 +854,9 @@ def run(smoke: bool = False, prefix_mix: float = 0.75,
 
     # ---- beyond-paper: streaming client API (repro.api handles) ----
     bench_streaming(payload, sample_candidates=sample_candidates)
+
+    # ---- beyond-paper: observability cost + trace coverage ----
+    bench_observability(payload)
 
     # ---- beyond-paper: straggler mitigation + multi-replica scaling ----
     wl = Workload(rate=100, duration=dur, len_min=2, len_max=100, seed=1)

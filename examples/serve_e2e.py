@@ -142,7 +142,8 @@ def main() -> None:
     from repro.api import GenerationParams, TurboClient
     client = TurboClient.from_arch("internlm2-1.8b",
                                    seq_buckets=(32, 64),
-                                   batch_buckets=(1, 2, 4))
+                                   batch_buckets=(1, 2, 4),
+                                   trace=True)
     handle = client.submit([3, 1, 4, 1, 5], GenerationParams(
         max_new_tokens=8, temperature=0.7, top_p=0.95, seed=42))
     print("  sampled stream:", list(handle.stream()))
@@ -151,6 +152,28 @@ def main() -> None:
     doomed.cancel()
     print(f"  cancelled second request in state {doomed.state}; "
           f"greedy result: {client.submit([2, 7, 1, 8]).result()}")
+
+    # ---- phase 5: observability — metrics snapshot + trace export ----
+    print("\nobservability: every phase-4 request left a lifecycle span; "
+          "the registry counted every tick")
+    snap = client.metrics()
+    c = snap["counters"]
+    print(f"  registry: {c['pipeline.admitted']} admitted, "
+          f"{c['pipeline.decode_ticks']} decode ticks, "
+          f"{c['pipeline.cancelled']} cancelled, tick p50="
+          f"{snap['histograms']['pipeline.tick_seconds']['p50']*1e3:.2f}ms")
+    rec = client.obs.trace
+    for rid in rec.request_ids():
+        names = rec.request_names(rid)
+        tally = {}
+        for n in names:
+            tally[n] = tally.get(n, 0) + 1
+        span = " -> ".join(n if tally[n] == 1 else f"{n}x{tally[n]}"
+                           for n in dict.fromkeys(names))
+        print(f"  req {rid} span: {span}")
+    doc = client.save_trace("serve_e2e_trace.json")
+    print(f"  exported {len(doc['traceEvents'])} Chrome-trace events -> "
+          "serve_e2e_trace.json (load in Perfetto / chrome://tracing)")
 
 
 if __name__ == "__main__":

@@ -28,11 +28,14 @@ import itertools
 import threading
 import time
 import weakref
-from typing import Callable, Iterator, List, Optional, Sequence, Union
+from collections import deque
+from typing import (Callable, Deque, Iterator, List, Optional, Sequence,
+                    Union)
 
 from repro.core.cost_model import AnalyticCostModel, CostModel
 from repro.core.pipeline import (PipelineBackend, PipelineConfig,
                                  ServingPipeline)
+from repro.obs import Histogram, Observability, TraceRecorder
 from repro.runtime.session import GenerationParams, Session, SessionState
 
 __all__ = ["GenerationParams", "RequestHandle", "TurboClient"]
@@ -51,14 +54,28 @@ class RequestHandle:
     TTFT (`ttft`) and inter-token latencies (`inter_token_latencies`)
     are measured where a user would measure them — at the handle, not
     inside the engine.
+
+    ITL telemetry is bounded: raw delivery timestamps live in a ring
+    of the most recent `ITL_WINDOW` deliveries (an unbounded list once
+    grew one float per token for the stream's whole life), and
+    percentile math over the FULL stream goes through a shared
+    `repro.obs.Histogram` (`itl_percentile`), which is O(buckets)
+    however long the stream runs.
     """
+
+    #: delivery timestamps retained for `inter_token_latencies` — a
+    #: window, not the stream's life
+    ITL_WINDOW = 1024
 
     def __init__(self, client: "TurboClient", session: Session) -> None:
         self._client = client
         self.session = session
         self.submit_time = client.clock()
         self._tokens: List[int] = []         # delivered, in order
-        self._token_times: List[float] = []  # wall time per delivery
+        self._first_token_time: Optional[float] = None
+        # wall time per delivery, most recent ITL_WINDOW only
+        self._token_times: Deque[float] = deque(maxlen=self.ITL_WINDOW)
+        self._itl_hist = Histogram()         # full-stream ITL summary
 
     # -- queries ---------------------------------------------------------
     @property
@@ -84,14 +101,22 @@ class RequestHandle:
     @property
     def ttft(self) -> Optional[float]:
         """Client-side time to first token (None until it lands)."""
-        if not self._token_times:
+        if self._first_token_time is None:
             return None
-        return self._token_times[0] - self.submit_time
+        return self._first_token_time - self.submit_time
 
     def inter_token_latencies(self) -> List[float]:
-        """Client-side gaps between consecutive token deliveries."""
-        return [b - a for a, b in zip(self._token_times,
-                                      self._token_times[1:])]
+        """Client-side gaps between consecutive token deliveries,
+        within the most recent `ITL_WINDOW` deliveries (use
+        `itl_percentile` for full-stream summaries)."""
+        times = list(self._token_times)
+        return [b - a for a, b in zip(times, times[1:])]
+
+    def itl_percentile(self, q: float) -> float:
+        """Full-stream inter-token latency at quantile ``q`` in (0, 1]
+        (log-bucketed `repro.obs.Histogram` — constant memory no matter
+        how long the stream ran); 0.0 before the second token."""
+        return self._itl_hist.percentile(q)
 
     # -- consumption -----------------------------------------------------
     def result(self, timeout: Optional[float] = None) -> List[int]:
@@ -142,8 +167,18 @@ class RequestHandle:
 
     # internal: the client's token callback appends here
     def _deliver(self, toks: Sequence[int], now: float) -> None:
-        self._tokens.extend(int(t) for t in toks)
-        self._token_times.extend([now] * len(toks))
+        if not toks:
+            return
+        if self._first_token_time is None:
+            self._first_token_time = now
+        for t in toks:
+            self._tokens.append(int(t))
+            if self._token_times:
+                # tokens within one delivery share a timestamp, so the
+                # intra-batch gaps land as 0.0 — same as the old
+                # unbounded-list telemetry
+                self._itl_hist.observe(now - self._token_times[-1])
+            self._token_times.append(now)
 
 
 class TurboClient:
@@ -165,7 +200,8 @@ class TurboClient:
                  config: Optional[PipelineConfig] = None,
                  clock: Optional[Callable[[], float]] = None,
                  auto_pump: Union[str, bool] = "sync",
-                 warmup: bool = False) -> None:
+                 warmup: bool = False,
+                 trace: Union[bool, TraceRecorder] = False) -> None:
         if auto_pump not in ("sync", "thread", False):
             raise ValueError("auto_pump must be 'sync', 'thread' or "
                              f"False, got {auto_pump!r}")
@@ -182,9 +218,16 @@ class TurboClient:
             self.warmup_stats = backend.warmup_aot()
         cost = cost_model if cost_model is not None \
             else AnalyticCostModel(**_DEFAULT_COST)
+        # observability: metrics always on; tracing per `trace` (True
+        # for a default recorder, or bring your own TraceRecorder)
+        if isinstance(trace, TraceRecorder):
+            obs = Observability(trace=trace)
+        else:
+            obs = Observability.with_trace() if trace else Observability()
+        self.obs = obs
         self.pipeline = ServingPipeline(
             backend, cost, config if config is not None
-            else PipelineConfig(), clock)
+            else PipelineConfig(), clock, obs=obs)
         self.pipeline.on_token = self._on_token
         self.auto_pump = auto_pump
         # weak-valued: the registry only serves token routing and never
@@ -217,6 +260,7 @@ class TurboClient:
                   auto_pump: Union[str, bool] = "sync",
                   warmup: bool = True,
                   sample_candidates: Optional[int] = None,
+                  trace: Union[bool, TraceRecorder] = False,
                   **backend_kw) -> "TurboClient":
         """Build the whole serving stack from an arch name: reduced
         (``smoke=True``) or full config, fresh params, a bucketed
@@ -239,12 +283,14 @@ class TurboClient:
                                    prefix_cache=prefix_cache,
                                    **backend_kw)
         return cls(backend, cost_model=cost_model, config=config,
-                   auto_pump=auto_pump, warmup=warmup)
+                   auto_pump=auto_pump, warmup=warmup, trace=trace)
 
     @classmethod
     def simulated(cls, cost_model: Optional[CostModel] = None,
                   sim_config=None,
-                  auto_pump: Union[str, bool] = "sync") -> "TurboClient":
+                  auto_pump: Union[str, bool] = "sync",
+                  trace: Union[bool, TraceRecorder] = False
+                  ) -> "TurboClient":
         """The same client API over the virtual-clock simulator backend
         — parity harness for scheduling/streaming/cancellation tests
         with no model or device anywhere."""
@@ -257,7 +303,7 @@ class TurboClient:
         backend = VirtualBackend(cost, clock, lambda t: t, cfg, {}, [])
         return cls(backend, cost_model=cost,
                    config=cfg.pipeline_config(), clock=clock,
-                   auto_pump=auto_pump)
+                   auto_pump=auto_pump, trace=trace)
 
     # -- submission ------------------------------------------------------
     def submit(self, prompt: Sequence[int],
@@ -359,6 +405,35 @@ class TurboClient:
                     self._cv.notify_all()
                     raise
                 self._cv.notify_all()
+
+    # -- observability ---------------------------------------------------
+    def metrics(self) -> dict:
+        """Plain-dict snapshot of the serving stack's metrics registry
+        (pipeline counters/gauges/histograms plus whatever the backend
+        samples at tick boundaries).  Taken under the client lock so a
+        concurrent pump thread never half-updates it."""
+        with self._cv:
+            return self.obs.metrics.snapshot()
+
+    def trace_events(self) -> List[dict]:
+        """Raw trace-recorder events so far ([] when tracing is off);
+        snapshot under the client lock."""
+        with self._cv:
+            rec = self.obs.trace
+            return list(rec.events) if rec is not None else []
+
+    def save_trace(self, path: str) -> dict:
+        """Export the trace as Chrome trace-event JSON (Perfetto /
+        ``chrome://tracing``) to ``path``; returns the document.  Raises
+        RuntimeError when the client was built without ``trace``."""
+        from repro.obs import save_chrome_trace
+        with self._cv:
+            rec = self.obs.trace
+            if rec is None:
+                raise RuntimeError("tracing is off: construct the "
+                                   "client with trace=True")
+            events = list(rec.events)
+        return save_chrome_trace(events, path)
 
     # -- cancellation / teardown -----------------------------------------
     def _cancel(self, session: Session) -> bool:

@@ -36,6 +36,7 @@ simulation is the behavior deployed on hardware.
 """
 from __future__ import annotations
 
+import itertools
 import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -43,6 +44,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core.cost_model import CostModel, chunk_tokens_for_budget
 from repro.core.scheduler import (BatchPlan, dp_schedule, naive_schedule,
                                   nobatch_schedule)
+from repro.obs import Observability
 from repro.runtime.session import Session, SessionState
 
 # NOTE: repro.runtime.sanitizer is imported lazily (it subclasses
@@ -218,6 +220,13 @@ class PipelineConfig:
 
 @dataclass
 class PipelineStats:
+    """Scheduler counters.  Since the observability refactor the
+    pipeline's single counter system is its `repro.obs.MetricsRegistry`
+    (``pipeline.<field>`` counters); :attr:`ServingPipeline.stats` is a
+    compat view built from those counters on access, so existing tests
+    and benches keep reading the same fields.  Standalone instances
+    (e.g. the simulator's cross-replica aggregate) remain plain
+    dataclasses."""
     prefill_ticks: int = 0
     decode_ticks: int = 0
     prefill_batches: int = 0
@@ -228,13 +237,24 @@ class PipelineStats:
     cancelled: int = 0                  # sessions torn down by cancel()
 
 
+#: PipelineStats fields, in declaration order — each is mirrored by the
+#: registry counter ``pipeline.<field>``
+STAT_FIELDS = ("prefill_ticks", "decode_ticks", "prefill_batches",
+               "admitted", "deferred_prefills", "chunk_ticks",
+               "chunked_prefills", "cancelled")
+
+#: admission-veto reasons counted per tick under ``pipeline.veto.<r>``
+VETO_REASONS = ("stall", "capacity", "trigger", "drain")
+
+
 class ServingPipeline:
     """The shared scheduler loop.  Owns the admission queue and the set of
     in-flight sessions; delegates execution to a backend."""
 
     def __init__(self, backend: PipelineBackend, cost: CostModel,
                  config: Optional[PipelineConfig] = None,
-                 clock: Callable[[], float] = time.monotonic) -> None:
+                 clock: Callable[[], float] = time.monotonic,
+                 obs: Optional[Observability] = None) -> None:
         self.backend = backend
         self.cost = cost
         self.config = config if config is not None else PipelineConfig()
@@ -243,7 +263,31 @@ class ServingPipeline:
         self.live: List[Session] = []           # DECODE in flight
         self.chunking: List[Session] = []       # resumable PREFILL, FIFO
         self.finished: List[Session] = []
-        self.stats = PipelineStats()
+        # observability: the registry is the pipeline's ONE counter
+        # system (``stats`` is a view over it); the optional trace
+        # recorder gets a lifecycle span per request and a duration
+        # event per executed tick, timestamped by self.clock so wall
+        # and virtual clocks yield structurally identical traces.
+        # Recording touches host scalars only — never a device value.
+        self.obs = obs if obs is not None else Observability()
+        m = self.obs.metrics
+        self._stat = {f: m.counter("pipeline." + f) for f in STAT_FIELDS}
+        self._veto = {r: m.counter("pipeline.veto." + r)
+                      for r in VETO_REASONS}
+        self._c_tokens = m.counter("pipeline.tokens_delivered")
+        self._hist_tick = m.histogram("pipeline.tick_seconds")
+        self._hist_itl = m.histogram("pipeline.itl_seconds")
+        self._hist_ttft = m.histogram("pipeline.ttft_seconds")
+        self._hist_qwait = m.histogram("pipeline.queue_wait_seconds")
+        self._g_queue = m.gauge("pipeline.queue_depth")
+        self._g_batch = m.gauge("pipeline.decode_batch")
+        self._g_chunking = m.gauge("pipeline.chunking_depth")
+        self._trace_ids = itertools.count(1)
+        self._last_compile_count = 0
+        # did the last tick execute work (prefill/chunk/decode)?  The
+        # no-progress guard in drain() reads this instead of counters,
+        # so it keeps working even under a disabled registry.
+        self._tick_worked = False
         # token-emission callback (session, fresh_tokens): invoked after
         # every tick for each session whose host-visible generation grew
         # — the `repro.api` streaming handles hang off this.  Real-engine
@@ -266,6 +310,13 @@ class ServingPipeline:
         self._sanitize = sanitizer.enabled()
         self._stream_hwm: Dict[int, int] = {}
 
+    @property
+    def stats(self) -> PipelineStats:
+        """Compat view over the registry counters (all zeros under a
+        disabled registry — recording is a no-op there)."""
+        return PipelineStats(**{f: c.value
+                                for f, c in self._stat.items()})
+
     # ------------------------------------------------------------------
     # Admission control
     # ------------------------------------------------------------------
@@ -274,7 +325,14 @@ class ServingPipeline:
             raise ValueError(f"session {session.req_id} already "
                              f"{session.state}")
         self.backend.validate(session)
+        if session.trace_id is None:
+            session.trace_id = next(self._trace_ids)
         self.queue.append(session)
+        trace = self.obs.trace
+        if trace is not None:
+            trace.req_event(session, "enqueue", session.arrival_time,
+                            seq_len=session.seq_len,
+                            max_new_tokens=session.max_new_tokens)
 
     def cancel(self, session: Session) -> bool:
         """Tear down ``session`` in whatever state it is in — QUEUED
@@ -286,6 +344,7 @@ class ServingPipeline:
         FINISHED (nothing to do), True when it was cancelled here."""
         if session.is_finished:
             return False
+        was = session.state.value
         if session in self.queue:
             self.queue.remove(session)
         elif session in self.chunking:
@@ -303,9 +362,13 @@ class ServingPipeline:
         # device between host syncs accumulated timestamps for ticks
         # that emitted it nothing
         del session.token_times[len(session.generated):]
-        self.stats.cancelled += 1
+        self._stat["cancelled"].inc()
         self.finished.append(session)
         self._deliver_tokens([session])
+        trace = self.obs.trace
+        if trace is not None:
+            trace.req_event(session, "cancel", session.finish_time,
+                            was=was, generated=len(session.generated))
         self._stream_hwm.pop(session.req_id, None)
         return True
 
@@ -390,24 +453,33 @@ class ServingPipeline:
         return chunk_tokens_for_budget(self.cost, budget, quantum,
                                        max(cap, quantum))
 
-    def _admission_decision(self):
+    def _admission_decision(self, record: bool = False):
         """What an admission round would do right now:
         ``None`` (nothing to admit), ``"defer"`` (two-phase veto),
         ``("chunk", session, None)`` (begin a resumable chunked prefill
         for the queue head), or ``("plan", cand, plan)`` (dispatch
         ``plan``'s batches over ``cand``; plan is None when the idle
         path skipped the veto and the dispatcher should plan itself).
-        Pure — deterministic in pipeline state — so ``should_admit`` and
-        ``tick`` cannot disagree."""
+        Pure unless ``record`` (tick-internal): real scheduling rounds
+        count each non-admitting outcome with a queued request waiting
+        under ``pipeline.veto.<reason>`` — so ``should_admit`` and
+        ``tick`` cannot disagree, and "why is the queue not draining"
+        is answerable from the registry."""
         if not self.queue:
             return None
         if self.config.admission == "drain" and (self.live or
                                                  self.chunking):
+            if record:
+                self._veto["drain"].inc()
             return None
         cand = self._admissible()
         if not cand:
+            if record:
+                self._veto["capacity"].inc()
             return None
         if not self._trigger():
+            if record:
+                self._veto["trigger"].inc()
             return None
         decoding = self._decoding()
         if not decoding or len(decoding) < self.config.min_decode_batch:
@@ -431,16 +503,18 @@ class ServingPipeline:
             self.config.max_batch_size)
         if not self._prefill_worthwhile(
                 [cand[i] for i in plan.batches[0]]):
+            if record:
+                self._veto["stall"].inc()
             return "defer"
         return ("plan", cand, plan)
 
     def should_admit(self, record: bool = False) -> bool:
         """Pure query unless ``record`` (tick-internal): only real
         scheduling decisions count a deferral in the stats."""
-        decision = self._admission_decision()
+        decision = self._admission_decision(record=record)
         if decision == "defer":
             if record:
-                self.stats.deferred_prefills += 1
+                self._stat["deferred_prefills"].inc()
             return False
         return decision is not None
 
@@ -452,6 +526,9 @@ class ServingPipeline:
         prefill admission round, OR one decode step over every in-flight
         sequence.  Returns the sessions that finished during this tick."""
         done: List[Session] = []
+        self._tick_worked = False
+        t0 = self.clock()
+        kind: Optional[str] = None
         decoding = self._decoding()
         if self.chunking and (self._chunk_turn or not decoding):
             # a chunk's turn: advance the oldest resumable prefill by one
@@ -461,30 +538,36 @@ class ServingPipeline:
             # so chunking costs it no stalled tick
             self._chunk_turn = False
             fused = self._advance_chunk(done, decoding)
-            self.stats.chunk_ticks += 1
+            self._stat["chunk_ticks"].inc()
+            kind = "chunk"
             if fused:
                 now = self.clock()
                 for s in decoding:
                     s.token_times.append(now)
-                self.stats.decode_ticks += 1
+                self._observe_decode(decoding, now)
+                self._stat["decode_ticks"].inc()
+                kind = "chunk+decode"
         else:
-            decision = self._admission_decision()
+            decision = self._admission_decision(record=True)
             if decision == "defer":
-                self.stats.deferred_prefills += 1
+                self._stat["deferred_prefills"].inc()
                 decision = None
             if decision is not None:
-                kind, payload, plan = decision
-                if kind == "chunk":
+                dkind, payload, plan = decision
+                if dkind == "chunk":
                     self._begin_chunked(payload, done)
                 else:
                     self._dispatch_prefills(payload, done, plan)
+                kind = "prefill"
             elif decoding:
                 self.backend.decode_tick(decoding)
                 now = self.clock()
                 for s in decoding:
                     s.token_times.append(now)
-                self.stats.decode_ticks += 1
+                self._observe_decode(decoding, now)
+                self._stat["decode_ticks"].inc()
                 self._chunk_turn = True
+                kind = "decode"
         # unified sweep: collect everything that finished this tick —
         # decode completions AND sessions an out-of-band backend sync
         # (e.g. sync_every > 1) marked finished during a prefill tick
@@ -498,9 +581,92 @@ class ServingPipeline:
             del s.token_times[len(s.generated):]
         self.finished.extend(done)
         self._deliver_tokens(done)
+        self._emit_finished(done)
+        self._tick_boundary(kind, t0, len(decoding))
         if self._sanitize:
             self._check_invariants(done)
         return done
+
+    # ------------------------------------------------------------------
+    # Observability recording (host scalars only — see repro.obs)
+    # ------------------------------------------------------------------
+    def _observe_decode(self, decoding: List[Session],
+                        now: float) -> None:
+        """Per-decode-tick telemetry: inter-token-latency samples from
+        the just-appended emission timestamps, plus a per-request
+        ``decode`` span event when tracing."""
+        h = self._hist_itl
+        for s in decoding:
+            tt = s.token_times
+            if len(tt) >= 2:
+                h.observe(tt[-1] - tt[-2])
+        trace = self.obs.trace
+        if trace is not None:
+            b = len(decoding)
+            for s in decoding:
+                trace.req_event(s, "decode", now, batch=b)
+
+    def _emit_finished(self, done: List[Session]) -> None:
+        """Exactly one terminal span event per finished session (the
+        cancel() path emits its own ``cancel`` terminal instead)."""
+        trace = self.obs.trace
+        if trace is None:
+            return
+        for s in done:
+            trace.req_event(s, "finish", s.finish_time,
+                            reason=self._finish_reason(s),
+                            generated=len(s.generated))
+
+    @staticmethod
+    def _finish_reason(s: Session) -> str:
+        if s.cancelled:
+            return "cancel"
+        if s.error is not None:
+            return "error"
+        if s.is_one_shot:
+            return "oneshot"
+        if len(s.generated) >= s.max_new_tokens:
+            return "budget"
+        return "stop"            # eos / stop id / synthetic eos_at
+
+    def _tick_boundary(self, kind: Optional[str], t0: float,
+                       decode_batch: int) -> None:
+        """Tick-boundary recording: scheduler gauges, the tick-duration
+        histogram, backend gauge sampling (duck-typed
+        ``observe_metrics`` — host ints only, never a device read), and
+        the tick's trace slice.  ``kind`` is None when the tick
+        executed nothing (empty pipeline / un-triggered lazy queue)."""
+        m = self.obs.metrics
+        self._g_queue.set(len(self.queue))
+        self._g_batch.set(len(self.live))
+        self._g_chunking.set(len(self.chunking))
+        observe = getattr(self.backend, "observe_metrics", None)
+        if observe is not None:
+            observe(m)
+        if kind is None:
+            return
+        self._tick_worked = True
+        t1 = self.clock()
+        self._hist_tick.observe(t1 - t0)
+        trace = self.obs.trace
+        if trace is not None:
+            trace.tick(kind, t0, t1, batch=decode_batch,
+                       queue=len(self.queue), live=len(self.live))
+            cc = m.gauge("engine.compile_count").value
+            if cc > self._last_compile_count:
+                trace.record("compile", "engine", t1,
+                             n=cc - self._last_compile_count)
+            self._last_compile_count = cc
+
+    def _record_splice(self, s: Session) -> None:
+        """A session just spliced into decode: its seed token exists, so
+        TTFT is known — observe it and emit the ``splice`` span event at
+        the first-token timestamp."""
+        ft = s.first_token_time
+        self._hist_ttft.observe(ft - s.arrival_time)
+        trace = self.obs.trace
+        if trace is not None:
+            trace.req_event(s, "splice", ft, cached=s.cached_tokens)
 
     def _check_invariants(self, done: List[Session]) -> None:
         """Tick-boundary sanitizer checks: monotonic `streamed` delivery
@@ -538,10 +704,16 @@ class ServingPipeline:
         syncs."""
         if self.on_token is None:
             return
+        trace = self.obs.trace
+        now = self.clock() if trace is not None else 0.0
         for s in self.live + done:
             fresh = s.generated[s.streamed:]
             if fresh:
                 s.streamed = len(s.generated)
+                self._c_tokens.inc(len(fresh))
+                if trace is not None:
+                    trace.req_event(s, "stream", now, n=len(fresh),
+                                    total=s.streamed)
                 self.on_token(s, list(fresh))
 
     def _dispatch_prefills(self, cand: List[Session], done: List[Session],
@@ -560,6 +732,7 @@ class ServingPipeline:
         # the paper's batch-at-a-time behavior)
         if self._decoding():
             batches = batches[:1]
+        trace = self.obs.trace
         admitted = set()
         for batch_idx in batches:
             batch = [cand[i] for i in batch_idx]
@@ -568,6 +741,10 @@ class ServingPipeline:
             for s in batch:
                 s.start_prefill(now, batch_size=len(batch),
                                 padded_len=padded)
+                self._hist_qwait.observe(now - s.arrival_time)
+                if trace is not None:
+                    trace.req_event(s, "admit", now, batch=len(batch),
+                                    padded=padded)
             try:
                 self.backend.prefill_batch(batch, padded)
             except Exception as exc:
@@ -583,22 +760,30 @@ class ServingPipeline:
                 self.queue = [s for s in self.queue
                               if id(s) not in admitted]
                 self.finished.extend(done)
+                # the raise skips tick()'s sweep — terminals emit here
+                self._emit_finished(done)
                 raise
             self.batch_log.append(tuple(s.req_id for s in batch))
-            self.stats.prefill_batches += 1
+            self._stat["prefill_batches"].inc()
+            now = self.clock()
             for s in batch:
                 admitted.add(id(s))
+                if trace is not None:
+                    trace.req_event(s, "prefill", now, upto=s.seq_len,
+                                    cached=s.cached_tokens,
+                                    fresh=s.seq_len - s.cached_tokens)
                 if s.is_finished:
                     done.append(s)
                 elif s.state is SessionState.DECODE:
+                    self._record_splice(s)
                     self.live.append(s)
                 else:
                     raise RuntimeError(
                         f"backend left session {s.req_id} in "
                         f"{s.state} after prefill")
         self.queue = [s for s in self.queue if id(s) not in admitted]
-        self.stats.prefill_ticks += 1
-        self.stats.admitted += len(admitted)
+        self._stat["prefill_ticks"].inc()
+        self._stat["admitted"].inc(len(admitted))
 
     def _begin_chunked(self, session: Session,
                        done: List[Session]) -> None:
@@ -607,6 +792,12 @@ class ServingPipeline:
         chunk — so the admission tick does real prefill work."""
         session.start_prefill(self.clock(), batch_size=1,
                               padded_len=session.seq_len)
+        self._hist_qwait.observe(session.prefill_time -
+                                 session.arrival_time)
+        trace = self.obs.trace
+        if trace is not None:
+            trace.req_event(session, "admit", session.prefill_time,
+                            batch=1, chunked=True)
         try:
             self.backend.begin_prefill_chunks(session)
         except Exception as exc:
@@ -616,15 +807,16 @@ class ServingPipeline:
             self.queue.remove(session)
             done.append(session)
             self.finished.append(session)
+            self._emit_finished([session])
             raise
         self.queue.remove(session)
         self.chunking.append(session)
         self.batch_log.append((session.req_id,))
-        self.stats.prefill_batches += 1
-        self.stats.admitted += 1
-        self.stats.chunked_prefills += 1
+        self._stat["prefill_batches"].inc()
+        self._stat["admitted"].inc()
+        self._stat["chunked_prefills"].inc()
         self._advance_chunk(done)
-        self.stats.chunk_ticks += 1
+        self._stat["chunk_ticks"].inc()
         # this tick DID chunk work: a pending chunk turn from an earlier
         # decode tick is consumed, decode runs before the next chunk
         self._chunk_turn = False
@@ -639,7 +831,8 @@ class ServingPipeline:
         batch, which must not advance before its first timestamped tick
         — and only when both config and backend support the fusion."""
         s = self.chunking[0]
-        upto = min(s.prefilled_tokens + self._chunk_tokens(), s.seq_len)
+        prev = s.prefilled_tokens
+        upto = min(prev + self._chunk_tokens(), s.seq_len)
         fused = bool(decoding) and upto < s.seq_len and \
             self.config.fused_chunk_decode and \
             self.backend.supports_fused_chunk_decode()
@@ -656,13 +849,21 @@ class ServingPipeline:
             self.chunking.remove(s)
             done.append(s)
             self.finished.append(s)
+            self._emit_finished([s])
             raise
+        trace = self.obs.trace
+        if trace is not None:
+            trace.req_event(s, "prefill", self.clock(),
+                            upto=s.prefilled_tokens,
+                            fresh=s.prefilled_tokens - prev,
+                            cached=s.cached_tokens)
         if s.prefilled_tokens < s.seq_len:
             return fused                 # mid-prompt; resume next turn
         self.chunking.remove(s)
         if s.is_finished:
             done.append(s)
         elif s.state is SessionState.DECODE:
+            self._record_splice(s)
             self.live.append(s)
         else:
             raise RuntimeError(f"backend left session {s.req_id} in "
@@ -685,16 +886,16 @@ class ServingPipeline:
         lazy queue from spinning forever."""
         out: List[Session] = []
         while not self.idle():
-            before = (self.stats.prefill_ticks, self.stats.decode_ticks,
-                      self.stats.chunk_ticks, self.clock())
+            t_before = self.clock()
             finished = self.tick()
             out.extend(finished)
             if finished:
                 continue
-            after = (self.stats.prefill_ticks, self.stats.decode_ticks,
-                     self.stats.chunk_ticks, self.clock())
-            if after[:3] == before[:3] and (
-                    after[3] == before[3]
+            # _tick_worked (not a registry counter, which a disabled
+            # registry pins at zero) says whether the tick executed any
+            # prefill / chunk / decode work
+            if not self._tick_worked and (
+                    self.clock() == t_before
                     or self.config.strategy == "hungry"):
                 # nothing executed; and either the clock is frozen (so
                 # nothing ever will) or the strategy is hungry (whose

@@ -30,6 +30,7 @@ from repro.core.cost_model import (CostModel, block_round,
 from repro.core.pipeline import (PipelineBackend, PipelineConfig,
                                  PipelineStats, ServingPipeline)
 from repro.core.serving import Request, Response
+from repro.obs import Observability
 from repro.runtime.session import Session
 
 
@@ -195,6 +196,16 @@ class VirtualBackend(PipelineBackend):
         self._chunking: Dict[int, Session] = {}
         self.chunk_latencies: List[float] = []
         self.decode_latencies: List[float] = []
+
+    def observe_metrics(self, m) -> None:
+        """Tick-boundary gauge sampling (the duck-typed hook
+        `ServingPipeline._tick_boundary` calls) — the virtual analogue
+        of `ContinuousEngine.observe_metrics`, over the same name
+        prefixes so wall and virtual snapshots line up."""
+        m.gauge("kv.live_tokens").set(
+            sum(self._charge(t) for t in self.kv_live.values()))
+        m.gauge("prefix.hits").set(self.prefix_hits)
+        m.gauge("prefix.reused_tokens").set(self.prefix_tokens_saved)
 
     # -- capacity ------------------------------------------------------
     def free_slots(self) -> Optional[int]:
@@ -458,6 +469,9 @@ class SimResult:
     itl_samples: List[float] = field(default_factory=list)
     chunk_latencies: List[float] = field(default_factory=list)
     decode_latencies: List[float] = field(default_factory=list)
+    # raw trace-recorder events (simulate(..., trace=True) runs only;
+    # virtual-clock timestamps — render with repro.obs.chrome_trace)
+    trace: Optional[List[dict]] = None
 
     def itl_percentile(self, q: float) -> float:
         """Inter-token latency at quantile ``q`` (0 < q <= 1), e.g.
@@ -499,10 +513,16 @@ class SimResult:
 
 
 def simulate(workload: Workload, cost: CostModel,
-             config: Optional[SimConfig] = None) -> SimResult:
+             config: Optional[SimConfig] = None, *,
+             trace: bool = False) -> SimResult:
     """Drive the shared ServingPipeline loop under a virtual clock:
     whenever a replica is the earliest free, it admits arrivals up to its
-    clock and ticks (a planned prefill round or one decode step)."""
+    clock and ticks (a planned prefill round or one decode step).
+
+    ``trace=True`` attaches a `repro.obs.TraceRecorder` per replica and
+    returns the merged raw events in ``SimResult.trace`` — structurally
+    identical to a wall-clock serving trace (same event names in the
+    same per-request order), just on virtual timestamps."""
     config = config if config is not None else SimConfig()
     sessions = workload.generate_sessions()
     rng = random.Random(config.seed + 1)
@@ -527,7 +547,9 @@ def simulate(workload: Workload, cost: CostModel,
         backend = VirtualBackend(
             cost, clock, service, config, {},
             kv_timeline if config.num_replicas == 1 else [])
-        pipelines.append(ServingPipeline(backend, cost, pcfg, clock))
+        obs = Observability.with_trace() if trace else None
+        pipelines.append(ServingPipeline(backend, cost, pcfg, clock,
+                                         obs=obs))
 
     ai = 0
     n = len(sessions)
@@ -571,12 +593,16 @@ def simulate(workload: Workload, cost: CostModel,
         for k in vars(stats):
             setattr(stats, k, getattr(stats, k) + getattr(p.stats, k))
     responses.sort(key=lambda r: (r.finish_time, r.req_id))
+    events: Optional[List[dict]] = None
+    if trace:
+        events = [ev for p in pipelines for ev in p.obs.trace.events]
+        events.sort(key=lambda ev: ev["ts"])
     return SimResult(responses, workload.duration, n,
                      kv_timeline=sorted(kv_timeline), batch_log=batch_log,
                      stats=stats, prefix_hits=prefix_hits,
                      prefix_tokens_saved=prefix_saved, itl_samples=itl,
                      chunk_latencies=chunk_lats,
-                     decode_latencies=decode_lats)
+                     decode_latencies=decode_lats, trace=events)
 
 
 def throughput_curve(rates: Sequence[float], cost: CostModel,

@@ -59,6 +59,9 @@ def build_parser() -> argparse.ArgumentParser:
                     help="0 = greedy; > 0 samples with per-request seeds")
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="record the generative phase and export a "
+                    "Chrome-trace JSON (Perfetto / chrome://tracing)")
     return ap
 
 
@@ -112,7 +115,7 @@ def main() -> None:
     client = TurboClient(
         ContinuousEngine(engine, max_slots=8,
                          cap_new=max(args.max_new_tokens, 1)),
-        cost_model=cost)
+        cost_model=cost, trace=args.trace is not None)
     gp = [GenerationParams(max_new_tokens=args.max_new_tokens,
                            temperature=args.temperature,
                            top_k=args.top_k, top_p=args.top_p, seed=i)
@@ -135,6 +138,16 @@ def main() -> None:
     if itls:
         print(f"  client-side ITL p50={statistics.median(itls)*1e3:.1f}ms "
               f"max={max(itls)*1e3:.1f}ms")
+
+    snap = client.metrics()
+    ticks = snap["histograms"]["pipeline.tick_seconds"]
+    print(f"  metrics: {snap['counters']['pipeline.decode_ticks']} decode "
+          f"ticks, tick p50={ticks['p50']*1e3:.2f}ms "
+          f"p99={ticks['p99']*1e3:.2f}ms")
+    if args.trace is not None:
+        doc = client.save_trace(args.trace)
+        print(f"  trace: {len(doc['traceEvents'])} events -> "
+              f"{args.trace} (load in Perfetto / chrome://tracing)")
 
 
 if __name__ == "__main__":

@@ -675,6 +675,26 @@ class ContinuousEngine(PipelineBackend):
         return sum(1 for s in self.sessions if s is None) \
             - len(self._chunk_slots)
 
+    def observe_metrics(self, m) -> None:
+        """Tick-boundary gauge sampling for the observability registry
+        (the duck-typed hook `ServingPipeline._tick_boundary` calls).
+        Every value set here is host-side Python bookkeeping the engine
+        already maintains — no device value is ever read."""
+        m.gauge("engine.compile_count").set(self.engine.compile_count)
+        m.gauge("engine.prefill_tokens").set(self.prefill_tokens)
+        m.gauge("engine.decode_ticks").set(self.decode_ticks)
+        m.gauge("engine.cow_blocks").set(self.cow_blocks)
+        for k, v in self.engine.kv_slab.metrics().items():
+            m.gauge("slab." + k).set(v)
+        if self.block_table is not None:
+            for k, v in self.block_table.metrics().items():
+                m.gauge("kv." + k).set(v)
+            m.gauge("kv.reserved_blocks").set(
+                sum(self._reserved.values()))
+        if self.prefix_cache is not None:
+            for k, v in self.prefix_cache.metrics().items():
+                m.gauge("prefix." + k).set(v)
+
     def free_kv_tokens(self) -> Optional[int]:
         """Token capacity of blocks neither held nor reserved — the
         admission budget the pipeline charges ``kv_demand`` against.

@@ -176,6 +176,13 @@ class KVSlabManager:
         a request hits EOS (paper Figs. 11/12, in KV form)."""
         return sum(r.tokens for r in self._regions.values())
 
+    def metrics(self) -> dict:
+        """Host-int gauge levels for the observability registry (see
+        `repro.obs`) — sampled at tick boundaries, never a device read."""
+        return {"footprint_bytes": self.footprint,
+                "live_bytes": self.live_bytes,
+                "live_tokens": self.live_tokens}
+
 
 DEFAULT_KV_BLOCK = 16      # tokens per paged-KV block
 
@@ -249,6 +256,15 @@ class BlockTableManager:
     def live_tokens(self) -> int:
         """Tokens of KV state actually written by live requests."""
         return sum(self._tokens.values())
+
+    def metrics(self) -> dict:
+        """Host-int gauge levels for the observability registry (see
+        `repro.obs`) — sampled at tick boundaries, never a device read."""
+        return {"blocks_free": self.free_blocks,
+                "blocks_used": self.used_blocks,
+                "capacity_tokens": self.capacity_tokens,
+                "footprint_tokens": self.footprint_tokens,
+                "live_tokens": self.live_tokens}
 
     def has_request(self, req_id: int) -> bool:
         return req_id in self._tables

@@ -144,6 +144,14 @@ class RadixPrefixCache:
         return sum(1 for n in self._nodes()
                    if self.btm.ref_count(n.block) == 1)
 
+    def metrics(self) -> dict:
+        """:meth:`stats` plus the evictable-block level — the gauge set
+        the observability registry samples at tick boundaries (see
+        `repro.obs`).  Host ints only."""
+        out = dict(self.stats())
+        out["evictable_blocks"] = self.evictable_blocks()
+        return out
+
     # -- matching --------------------------------------------------------
     def match(self, tokens: Sequence[int], *,
               take_refs: bool = True) -> PrefixMatch:

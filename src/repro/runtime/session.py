@@ -111,6 +111,12 @@ class Session:
     seed: int = 0
     stop: Tuple[int, ...] = ()        # extra stop ids beyond eos_id
 
+    # observability: span identity for the request's lifecycle trace.
+    # Assigned by the pipeline at submit (monotonic per pipeline) unless
+    # the caller set one; every trace event the session emits carries it
+    # (see repro.obs.trace — this module stays dependency-free).
+    trace_id: Optional[int] = None
+
     state: SessionState = SessionState.QUEUED
     generated: List[int] = field(default_factory=list)
     result: Any = None
