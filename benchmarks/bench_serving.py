@@ -25,7 +25,7 @@ Every run writes a machine-readable trajectory to ``BENCH_serving.json``
 the file schema valid on every push; the paper-claim assertions only run
 at full scale.
 
-``BENCH_serving.json`` schema (``bench_serving/v7``).  ``observability``
+``BENCH_serving.json`` schema (``bench_serving/v8``).  ``observability``
 section (real engine, the `repro.obs` registry + trace recorder)::
 
     observability:
@@ -97,6 +97,22 @@ section (real engine, the `repro.obs` registry + trace recorder)::
       real_engine:
         token_for_token_equal:   # chunked vs unchunked generations
         chunk_ticks / chunked_prefills / prefill_tokens
+
+``packed_prefill`` section (packed segment-id prefill A/B)::
+
+    packed_prefill:
+      workload: {rate, duration, long_len, long_frac, gen_tokens}
+      sim:                       # same arrivals, packed vs sequential
+        dispatches_per_prompt_packed / dispatches_per_prompt_sequential
+        dispatch_reduction:      # sequential / packed (asserted >= 2x)
+        pack_dispatches / pack_segments / segments_per_pack
+        ttft_p50_* / ttft_p99_*  # bursty TTFT both schedules
+        completed:               # identical in both runs (asserted)
+      real_engine:
+        token_for_token_equal:   # packed vs sequential generations
+                                 # bit-identical (asserted)
+        prefill_dispatches:      # per mode; packed strictly fewer
+        pack_dispatches / pack_segments
 """
 from __future__ import annotations
 
@@ -467,6 +483,124 @@ def bench_chunked_prefill(payload: dict, dur: float) -> None:
     payload["chunked_prefill"] = section
 
 
+def bench_packed_prefill(payload: dict, dur: float) -> None:
+    """Packed segment-id prefill A/B: one dispatch for many prompts
+    and chunks.
+
+    Simulated, SAME arrival stream, packed vs sequential scheduling:
+    a bursty mixed workload (30% ~1000-token prompts chunking while
+    short prompts keep arriving) where the sequential schedule pays one
+    dispatch per chunk turn PLUS one per admission round; the pack
+    scheduler folds the queued shorts into every chunk turn, so
+    dispatches-per-admitted-prompt must drop >= 2x while completions
+    and scheduling stay otherwise comparable.  Bursty TTFT percentiles
+    are recorded for both schedules (packing trades a <= 1-tick
+    admission delay against the saved dispatches).
+
+    Real engine: the same mixed prompt set served packed and
+    sequential — generations must be token-for-token identical
+    (packing changes HOW prefill work is dispatched, never its
+    result), with fewer device dispatches on the packed run."""
+    from repro.core import SimConfig, Workload, simulate
+
+    wl = Workload(rate=80, duration=dur, len_min=4, len_max=40, seed=0,
+                  gen_tokens=32, gen_min=4, long_len=1000, long_frac=0.3)
+    kw = dict(policy="dp", admission="continuous", kv_block_size=16,
+              num_kv_blocks=4096, chunked_prefill=True)
+    packed = simulate(wl, TURBO_CM, SimConfig(packed_prefill=True, **kw))
+    seq = simulate(wl, TURBO_CM, SimConfig(packed_prefill=False, **kw))
+    assert len(packed.responses) == len(seq.responses), \
+        "packing must not change which sessions complete"
+    assert packed.pack_dispatches > 0 and packed.pack_segments > \
+        packed.pack_dispatches, "packs must carry multiple segments"
+    d_packed = packed.prefill_dispatches / max(packed.stats.admitted, 1)
+    d_seq = seq.prefill_dispatches / max(seq.stats.admitted, 1)
+    ratio = d_seq / max(d_packed, 1e-12)
+    assert ratio >= 2.0, \
+        f"packed prefill must halve dispatches/prompt, got {ratio:.2f}x"
+    section = {
+        "workload": {"rate": wl.rate, "duration": dur,
+                     "long_len": wl.long_len, "long_frac": wl.long_frac,
+                     "gen_tokens": wl.gen_tokens},
+        "sim": {
+            "dispatches_per_prompt_packed": d_packed,
+            "dispatches_per_prompt_sequential": d_seq,
+            "dispatch_reduction": ratio,
+            "pack_dispatches": packed.pack_dispatches,
+            "pack_segments": packed.pack_segments,
+            "segments_per_pack":
+                packed.pack_segments / max(packed.pack_dispatches, 1),
+            "ttft_p50_packed": packed.ttft_percentile(0.50),
+            "ttft_p99_packed": packed.ttft_percentile(0.99),
+            "ttft_p50_sequential": seq.ttft_percentile(0.50),
+            "ttft_p99_sequential": seq.ttft_percentile(0.99),
+            "completed": len(packed.responses),
+        },
+    }
+    emit("packed_prefill_sim", 0.0,
+         f"disp_per_prompt_{d_seq:.3f}to{d_packed:.3f}_"
+         f"reduction_{ratio:.2f}x_"
+         f"segs_per_pack_{section['sim']['segments_per_pack']:.1f}")
+
+    # ---- real engine: packed vs sequential, identical tokens ----
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+    from repro.runtime import BucketLadder, InferenceEngine
+    from repro.runtime.engine import ContinuousEngine
+    from repro.runtime.session import Session
+    from repro.core import ServingConfig, ServingSystem
+
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_params(cfg, jax.random.key(0))
+    eng = InferenceEngine(cfg, params, ladder=BucketLadder(
+        seq_buckets=(32, 64), batch_buckets=(1, 2, 4)))
+    cm = AnalyticCostModel(flops_per_token=1e6, bytes_per_token=1e3,
+                           weight_bytes=1e6, overhead=1e-4)
+    long_prompt = [(i * 7) % 50 + 2 for i in range(40)]
+    specs = [([1, 2, 3], 10), (list(long_prompt), 6), ([9, 8, 7], 8),
+             ([4, 5], 6), ([6, 5, 4, 3], 6)]
+    results = {}
+    outputs = {}
+    for mode, on in (("sequential", False), ("packed", True)):
+        ce = ContinuousEngine(eng, max_slots=4, cap_new=16,
+                              kv_layout="paged", packed_prefill=on)
+        sys_ = ServingSystem(backend=ce, cost_model=cm,
+                             config=ServingConfig(
+                                 policy="dp", max_batch_size=4,
+                                 chunked_prefill=True,
+                                 prefill_chunk_tokens=16))
+        sessions = [Session(i, len(p), 0.0, prompt=list(p),
+                            max_new_tokens=m)
+                    for i, (p, m) in enumerate(specs)]
+        sys_.submit(sessions[0])
+        sys_.step()                      # prefill the short head ...
+        sys_.step()                      # ... and get it decoding
+        for s in sessions[1:]:
+            sys_.submit(s)               # long + shorts land mid-decode
+        sys_.drain()
+        outputs[mode] = [s.result for s in sessions]
+        results[mode] = {
+            "prefill_dispatches": ce.prefill_dispatches,
+            "pack_dispatches": ce.pack_dispatches,
+            "pack_segments": ce.pack_segments,
+        }
+        assert eng.kv_slab.live_bytes == 0
+        assert ce.block_table.used_blocks == 0
+    assert outputs["packed"] == outputs["sequential"], \
+        "packed prefill must not change a single generated token"
+    assert results["packed"]["pack_dispatches"] > 0
+    assert results["packed"]["prefill_dispatches"] < \
+        results["sequential"]["prefill_dispatches"], \
+        "packing must save device dispatches on the mixed workload"
+    results["token_for_token_equal"] = True
+    emit("packed_prefill_real_engine", 0.0,
+         f"dispatches_{results['sequential']['prefill_dispatches']}to"
+         f"{results['packed']['prefill_dispatches']}_tokens_identical")
+    section["real_engine"] = results
+    payload["packed_prefill"] = section
+
+
 def bench_streaming(payload: dict,
                     sample_candidates: Optional[int] = None) -> None:
     """Client-handle streaming telemetry through the `repro.api` front
@@ -725,7 +859,7 @@ def bench_observability(payload: dict) -> None:
 def run(smoke: bool = False, prefix_mix: float = 0.75,
         sample_candidates: Optional[int] = None) -> dict:
     payload = {
-        "schema": "bench_serving/v7",
+        "schema": "bench_serving/v8",
         "mode": "smoke" if smoke else "full",
         "throughput": {},
         "kv_footprint": {},
@@ -851,6 +985,9 @@ def run(smoke: bool = False, prefix_mix: float = 0.75,
 
     # ---- beyond-paper: chunked prefill decode-stall study ----
     bench_chunked_prefill(payload, dur)
+
+    # ---- beyond-paper: packed segment-id prefill A/B ----
+    bench_packed_prefill(payload, dur)
 
     # ---- beyond-paper: streaming client API (repro.api handles) ----
     bench_streaming(payload, sample_candidates=sample_candidates)

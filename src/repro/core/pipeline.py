@@ -142,6 +142,30 @@ class PipelineBackend:
         """Release everything ``begin_prefill_chunks``/``prefill_chunk``
         hold for a session whose chunked prefill failed terminally."""
 
+    # -- packed prefill (optional capability) ----------------------------
+    def supports_packed_prefill(self) -> bool:
+        """Whether :meth:`prefill_pack` serves many segments (queued
+        admissions and resumable-prefill chunks) in ONE dispatch.  The
+        pipeline only composes pack groups when both the config asks
+        for it and the backend can serve them."""
+        return False
+
+    def pack_bucket(self, flat_tokens: int) -> int:
+        """Padded size of the packed dispatch a flat token count
+        executes as — the pack-occupancy histogram's denominator."""
+        return max(int(flat_tokens), 1)
+
+    def prefill_pack(self, admissions: List[Session],
+                     chunks: List[Tuple[Session, int]],
+                     decoding: Optional[List[Session]] = None) -> None:
+        """One packed dispatch over ``admissions`` (sessions already in
+        PREFILL, admitted whole) plus ``chunks`` (``(session, upto)``
+        next-chunk advances).  Admissions and final chunks must leave
+        in DECODE (or finished); ``decoding`` — only passed when
+        nothing in the pack splices — fuses a decode tick behind the
+        pack the way :meth:`chunk_decode_tick` does."""
+        raise NotImplementedError
+
     # -- fused chunk+decode (optional capability) ------------------------
     def supports_fused_chunk_decode(self) -> bool:
         """Whether :meth:`chunk_decode_tick` runs a prefill chunk and a
@@ -216,6 +240,12 @@ class PipelineConfig:
     # in-flight sequences no extra inter-token latency and per-tick
     # dispatch overhead is paid once instead of twice
     fused_chunk_decode: bool = True
+    # packed prefill: compose pack GROUPS on chunk turns — every
+    # resumable prefill's next chunk (round-robin share of the token
+    # budget) plus queued short prompts filling the leftover — and
+    # dispatch them as ONE flat segment-id prefill (backend capability
+    # permitting), instead of advancing a single session per tick
+    packed_prefill: bool = True
 
 
 @dataclass
@@ -244,7 +274,7 @@ STAT_FIELDS = ("prefill_ticks", "decode_ticks", "prefill_batches",
                "chunked_prefills", "cancelled")
 
 #: admission-veto reasons counted per tick under ``pipeline.veto.<r>``
-VETO_REASONS = ("stall", "capacity", "trigger", "drain")
+VETO_REASONS = ("stall", "capacity", "trigger", "drain", "pack_wait")
 
 
 class ServingPipeline:
@@ -282,6 +312,12 @@ class ServingPipeline:
         self._g_queue = m.gauge("pipeline.queue_depth")
         self._g_batch = m.gauge("pipeline.decode_batch")
         self._g_chunking = m.gauge("pipeline.chunking_depth")
+        # packed-prefill telemetry: dispatches vs segments served gives
+        # the packing ratio; occupancy is flat tokens over the padded
+        # pack bucket actually executed (1.0 = no padding waste)
+        self._c_pack_disp = m.counter("pipeline.pack.dispatches")
+        self._c_pack_segs = m.counter("pipeline.pack.segments")
+        self._hist_pack = m.histogram("pipeline.pack.occupancy")
         self._trace_ids = itertools.count(1)
         self._last_compile_count = 0
         # did the last tick execute work (prefill/chunk/decode)?  The
@@ -300,6 +336,11 @@ class ServingPipeline:
         # a chunk; after a chunk tick decode runs again — so no decode
         # token waits for more than one chunk of prefill work
         self._chunk_turn = False
+        # pack-group rotation cursor: each pack turn starts its
+        # round-robin over ``chunking`` one session later, so a budget
+        # too small for every session's chunk still reaches all of them
+        # within a few turns (no FIFO-head starvation)
+        self._chunk_rr = 0
         # req-id composition of every executed prefill batch, in dispatch
         # order — lets tests assert real-vs-virtual scheduling equivalence
         self.batch_log: List[Tuple[int, ...]] = []
@@ -426,8 +467,14 @@ class ServingPipeline:
         decoding = self._decoding()
         if not decoding or len(decoding) < self.config.min_decode_batch:
             return True
-        stall = self.cost.prefill_latency(
-            max(s.seq_len for s in batch), len(batch))
+        if self._pack_enabled():
+            # a packed admission executes as ONE flat dispatch over the
+            # group's total tokens — price the stall it actually imposes
+            stall = self.cost.packed_prefill_latency(
+                sum(s.seq_len for s in batch), len(batch))
+        else:
+            stall = self.cost.prefill_latency(
+                max(s.seq_len for s in batch), len(batch))
         return stall <= self.config.prefill_stall_factor * \
             self._decode_tick_cost(decoding)
 
@@ -435,6 +482,13 @@ class ServingPipeline:
     def _chunk_enabled(self) -> bool:
         return self.config.chunked_prefill and \
             self.backend.supports_chunked_prefill()
+
+    def _pack_enabled(self) -> bool:
+        # getattr: duck-typed backends predating the packed capability
+        # simply never pack
+        sup = getattr(self.backend, "supports_packed_prefill", None)
+        return bool(self.config.packed_prefill and sup is not None
+                    and sup())
 
     def _chunk_tokens(self) -> int:
         """Tokens the next prefill chunk may cover: a whole number of
@@ -533,11 +587,17 @@ class ServingPipeline:
         if self.chunking and (self._chunk_turn or not decoding):
             # a chunk's turn: advance the oldest resumable prefill by one
             # budget-sized chunk; the next tick goes back to decode.
-            # When the backend can fuse, a NON-final chunk and the decode
-            # tick run as ONE dispatch — the decode batch advances too,
-            # so chunking costs it no stalled tick
+            # With packed prefill the turn serves a whole PACK GROUP —
+            # every resumable prefill's next chunk plus queued short
+            # prompts — in one dispatch.  When the backend can fuse, a
+            # NON-final chunk and the decode tick run as ONE dispatch —
+            # the decode batch advances too, so chunking costs it no
+            # stalled tick
             self._chunk_turn = False
-            fused = self._advance_chunk(done, decoding)
+            if self._pack_enabled():
+                fused = self._advance_pack(done, decoding)
+            else:
+                fused = self._advance_chunk(done, decoding)
             self._stat["chunk_ticks"].inc()
             kind = "chunk"
             if fused:
@@ -551,6 +611,15 @@ class ServingPipeline:
             decision = self._admission_decision(record=True)
             if decision == "defer":
                 self._stat["deferred_prefills"].inc()
+                decision = None
+            if decision is not None and decision[0] == "plan" and \
+                    self._pack_enabled() and self.chunking and \
+                    decision[1][0].seq_len <= self._chunk_tokens() // 2:
+                # resumable prefills are in flight and the queue head
+                # fits the next pack's admission room: let the shorts
+                # ride that pack turn instead of paying their own
+                # dispatch here — the decode batch advances meanwhile
+                self._veto["pack_wait"].inc()
                 decision = None
             if decision is not None:
                 dkind, payload, plan = decision
@@ -815,7 +884,10 @@ class ServingPipeline:
         self._stat["prefill_batches"].inc()
         self._stat["admitted"].inc()
         self._stat["chunked_prefills"].inc()
-        self._advance_chunk(done)
+        if self._pack_enabled():
+            self._advance_pack(done)
+        else:
+            self._advance_chunk(done)
         self._stat["chunk_ticks"].inc()
         # this tick DID chunk work: a pending chunk turn from an earlier
         # decode tick is consumed, decode runs before the next chunk
@@ -868,6 +940,135 @@ class ServingPipeline:
         else:
             raise RuntimeError(f"backend left session {s.req_id} in "
                                f"{s.state} after its final chunk")
+        return fused
+
+    def _advance_pack(self, done: List[Session],
+                      decoding: Optional[List[Session]] = None) -> bool:
+        """One PACK GROUP of prefill progress: the chunk-turn token
+        budget is split round-robin over every resumable prefill (each
+        gets a quantum-aligned share, starting one session later every
+        turn so none starves), queued prompts that fit the leftover
+        budget are pulled in as whole-prompt admissions, and the whole
+        group runs as ONE packed dispatch.  Replaces the one-chunk-per-
+        tick turn: N waiting segments no longer cost N dispatches and
+        N decode stalls.  Returns True when the pack was fused with a
+        decode tick (non-splicing packs only, like ``_advance_chunk``).
+        """
+        budget = self._chunk_tokens()
+        quantum = self.backend.chunk_quantum()
+        # queued prompts claim part of the budget as whole admissions
+        # FIRST — half when resumable prefills also need the turn, all
+        # of it otherwise.  This is what makes the pack pay off: the
+        # shorts that would have cost their own prefill dispatch on the
+        # alternate tick ride the chunk turn instead (same stall bound:
+        # the pack is ONE dispatch priced over its flat tokens).
+        admissions: List[Session] = []
+        if self.queue and self._trigger():
+            room = budget if not self.chunking else budget // 2
+            for s in self._admissible():
+                if len(admissions) >= self.config.max_batch_size:
+                    break
+                if s.seq_len > room:
+                    break            # FIFO: nobody overtakes the head
+                admissions.append(s)
+                room -= s.seq_len
+        used_adm = sum(s.seq_len for s in admissions)
+        chunks: List[Tuple[Session, int]] = []
+        used = 0
+        if self.chunking:
+            rot = self._chunk_rr % len(self.chunking)
+            self._chunk_rr += 1
+            order = self.chunking[rot:] + self.chunking[:rot]
+            left = max(budget - used_adm, quantum)
+            share = max((left // len(order)) // quantum * quantum,
+                        quantum)
+            for s in order:
+                if chunks and used + quantum > left:
+                    break            # rotation reaches it next turn
+                upto = min(s.prefilled_tokens + share, s.seq_len)
+                chunks.append((s, upto))
+                used += upto - s.prefilled_tokens
+        if not chunks and not admissions:
+            return False
+        finals = [s for s, upto in chunks if upto == s.seq_len]
+        fused = bool(decoding) and not admissions and not finals and \
+            self.config.fused_chunk_decode and \
+            self.backend.supports_fused_chunk_decode()
+        trace = self.obs.trace
+        prev = {s.req_id: s.prefilled_tokens for s, _ in chunks}
+        now = self.clock()
+        for s in admissions:
+            s.start_prefill(now, batch_size=len(admissions),
+                            padded_len=s.seq_len)
+            self._hist_qwait.observe(now - s.arrival_time)
+            if trace is not None:
+                trace.req_event(s, "admit", now, batch=len(admissions),
+                                packed=True)
+        try:
+            self.backend.prefill_pack(admissions, chunks,
+                                      decoding if fused else None)
+        except Exception as exc:
+            # the dispatch is atomic: fail the WHOLE group terminally.
+            # Chunk members still hold slots/blocks from
+            # begin_prefill_chunks — abort those; admissions were swept
+            # by the backend before the raise.
+            group = [s for s, _ in chunks] + admissions
+            for s in group:
+                if not s.is_finished:
+                    s.error = str(exc)
+                    s.finish(self.clock())
+            for s, _ in chunks:
+                self.backend.abort_chunked(s)
+                self.chunking.remove(s)
+            self.queue = [s for s in self.queue if s not in admissions]
+            done.extend(group)
+            self.finished.extend(group)
+            self._emit_finished(group)
+            raise
+        nseg = len(chunks) + len(admissions)
+        flat = used + sum(s.seq_len for s in admissions)
+        self._c_pack_disp.inc()
+        self._c_pack_segs.inc(nseg)
+        self._hist_pack.observe(flat / self.backend.pack_bucket(flat))
+        now = self.clock()
+        for s, upto in chunks:
+            if trace is not None:
+                trace.req_event(s, "prefill", now,
+                                upto=s.prefilled_tokens,
+                                fresh=upto - prev[s.req_id],
+                                cached=s.cached_tokens, packed_n=nseg)
+            if s.prefilled_tokens < s.seq_len:
+                continue             # mid-prompt; resumes next turn
+            self.chunking.remove(s)
+            if s.is_finished:
+                done.append(s)
+            elif s.state is SessionState.DECODE:
+                self._record_splice(s)
+                self.live.append(s)
+            else:
+                raise RuntimeError(f"backend left session {s.req_id} in "
+                                   f"{s.state} after its final chunk")
+        if admissions:
+            self.batch_log.append(tuple(s.req_id for s in admissions))
+            self._stat["prefill_batches"].inc()
+            self._stat["admitted"].inc(len(admissions))
+            admitted = {id(s) for s in admissions}
+            self.queue = [s for s in self.queue if id(s) not in admitted]
+            for s in admissions:
+                if trace is not None:
+                    trace.req_event(s, "prefill", now, upto=s.seq_len,
+                                    cached=s.cached_tokens,
+                                    fresh=s.seq_len - s.cached_tokens,
+                                    packed_n=nseg)
+                if s.is_finished:
+                    done.append(s)
+                elif s.state is SessionState.DECODE:
+                    self._record_splice(s)
+                    self.live.append(s)
+                else:
+                    raise RuntimeError(
+                        f"backend left session {s.req_id} in "
+                        f"{s.state} after packed admission")
         return fused
 
     def idle(self) -> bool:

@@ -123,6 +123,11 @@ class SimConfig:
     # the decode tick dispatch as one group, saving one per-dispatch
     # overhead and a stalled decode tick per chunk
     fused_chunk_decode: bool = True
+    # packed prefill (see PipelineConfig): chunk turns serve a pack
+    # group — every resumable prefill's share plus queued prompts — as
+    # ONE dispatch priced over the flat tokens; False models the
+    # one-chunk-per-tick baseline for A/B dispatch comparisons
+    packed_prefill: bool = True
     # prefix-sharing model (mirrors the real engine's RadixPrefixCache
     # over a Workload prefix mix): once one member of a prefix cohort has
     # prefilled, later members are charged only their uncached suffix —
@@ -150,7 +155,8 @@ class SimConfig:
             min_decode_batch=self.min_decode_batch,
             chunked_prefill=self.chunked_prefill,
             prefill_chunk_tokens=self.prefill_chunk_tokens,
-            fused_chunk_decode=self.fused_chunk_decode)
+            fused_chunk_decode=self.fused_chunk_decode,
+            packed_prefill=self.packed_prefill)
 
 
 class VirtualClock:
@@ -196,6 +202,11 @@ class VirtualBackend(PipelineBackend):
         self._chunking: Dict[int, Session] = {}
         self.chunk_latencies: List[float] = []
         self.decode_latencies: List[float] = []
+        # prefill device dispatches the model would issue — the packed
+        # vs sequential A/B metric benches read
+        self.prefill_dispatches = 0
+        self.pack_dispatches = 0
+        self.pack_segments = 0
 
     def observe_metrics(self, m) -> None:
         """Tick-boundary gauge sampling (the duck-typed hook
@@ -206,6 +217,7 @@ class VirtualBackend(PipelineBackend):
             sum(self._charge(t) for t in self.kv_live.values()))
         m.gauge("prefix.hits").set(self.prefix_hits)
         m.gauge("prefix.reused_tokens").set(self.prefix_tokens_saved)
+        m.gauge("engine.prefill_dispatches").set(self.prefill_dispatches)
 
     # -- capacity ------------------------------------------------------
     def free_slots(self) -> Optional[int]:
@@ -299,6 +311,7 @@ class VirtualBackend(PipelineBackend):
         eff_len = max(s.seq_len - s.cached_tokens for s in sessions)
         self.clock.advance(
             self.service(self.cost.prefill_latency(max(eff_len, 1), b)))
+        self.prefill_dispatches += 1
         now = self.clock.now
         for s in sessions:
             if s.is_one_shot:
@@ -375,6 +388,7 @@ class VirtualBackend(PipelineBackend):
         if self.decoding:
             self.chunk_latencies.append(lat)
         self.clock.advance(lat)
+        self.prefill_dispatches += 1
         s.prefilled_tokens = upto
         if upto < s.seq_len:
             return
@@ -415,6 +429,7 @@ class VirtualBackend(PipelineBackend):
         clat = self.service(self.cost.prefill_latency(max(n, 1), 1))
         self.chunk_latencies.append(clat)    # decoding is never empty here
         self.clock.advance(clat)
+        self.prefill_dispatches += 1
         s.prefilled_tokens = upto
         b = len(decoding)
         ctx = sum(d.seq_len + d.tokens_emitted for d in decoding) / b
@@ -436,6 +451,90 @@ class VirtualBackend(PipelineBackend):
     def abort_chunked(self, s: Session) -> None:
         self._chunking.pop(s.req_id, None)
         self.kv_live.pop(s.req_id, None)
+        self._sample_kv()
+
+    # -- packed prefill --------------------------------------------------
+    def supports_packed_prefill(self) -> bool:
+        return True
+
+    def prefill_pack(self, admissions: List[Session],
+                     chunks: List[Tuple[Session, int]],
+                     decoding: Optional[List[Session]] = None) -> None:
+        """Packed-dispatch model: ONE service time covering every
+        segment's fresh tokens (``packed_prefill_latency`` — a single
+        launch over the flat pack, the same pricing the real engine's
+        dispatch executes at), then exactly the per-session bookkeeping
+        the sequential ``prefill_batch``/``prefill_chunk`` paths do.
+        ``decoding`` fuses a decode tick behind the pack minus one
+        dispatch overhead, like ``chunk_decode_tick``."""
+        for s in admissions:
+            s.cached_tokens = self._cached_for(s)
+            if s.cached_tokens:
+                self.prefix_hits += 1
+                self.prefix_tokens_saved += s.cached_tokens
+        flat = sum(s.seq_len - s.cached_tokens for s in admissions) + \
+            sum(upto - s.prefilled_tokens for s, upto in chunks)
+        nseg = len(admissions) + len(chunks)
+        lat = self.service(self.cost.packed_prefill_latency(
+            max(flat, 1), nseg))
+        if self.decoding:
+            self.chunk_latencies.append(lat)
+        self.clock.advance(lat)
+        self.prefill_dispatches += 1
+        self.pack_dispatches += 1
+        self.pack_segments += nseg
+        now = self.clock.now
+        group: Dict[int, Session] = {}
+
+        def seed_decode(s: Session) -> None:
+            installed = 0
+            if self.config.prefix_cache and s.prefix_group is not None:
+                installed = self._install_prefix(s)
+            self.kv_live[s.req_id] = \
+                s.total_len - s.cached_tokens - installed
+            s.start_decode(now)
+            s.generated.append(1)    # first token comes from prefill
+            if s.stop_after(1):
+                s.finish(now)
+                self._on_finish(s)
+            else:
+                self.decoding.append(s)
+            group[s.req_id] = s
+
+        for s in admissions:
+            if s.is_one_shot:
+                s.finish(now)
+                continue
+            seed_decode(s)
+        for s, upto in chunks:
+            s.prefilled_tokens = upto
+            if upto < s.seq_len:
+                continue
+            del self._chunking[s.req_id]
+            if s.is_one_shot:
+                s.finish(now)
+                self.kv_live.pop(s.req_id, None)
+                continue
+            seed_decode(s)
+        if decoding is not None:
+            b = len(decoding)
+            ctx = sum(d.seq_len + d.tokens_emitted for d in decoding) / b
+            dlat = self.service(self.cost.decode_latency(b, int(ctx)))
+            dlat = max(dlat - getattr(self.cost, "overhead", 0.0), 0.0)
+            self.decode_latencies.append(dlat)
+            self.clock.advance(dlat)
+            tnow = self.clock.now
+            for d in decoding:
+                d.generated.append(1)
+                if d.stop_after(d.tokens_emitted):
+                    d.finish(tnow)
+                    self._on_finish(d)
+            self.decoding = [d for d in self.decoding
+                             if not d.is_finished]
+        if self.config.kv_free == "batch":
+            if group:
+                self._groups.append(group)
+            self._sweep_groups()
         self._sample_kv()
 
     # -- cancellation ----------------------------------------------------
@@ -469,6 +568,16 @@ class SimResult:
     itl_samples: List[float] = field(default_factory=list)
     chunk_latencies: List[float] = field(default_factory=list)
     decode_latencies: List[float] = field(default_factory=list)
+    # prefill-dispatch telemetry (packed vs sequential A/B): device
+    # dispatches the model issued, how many were packed, and the total
+    # segments those packs served
+    prefill_dispatches: int = 0
+    pack_dispatches: int = 0
+    pack_segments: int = 0
+    # time-to-first-token per finished session (arrival -> first
+    # emission); the pack scheduler trades dispatch count against TTFT,
+    # so A/B runs report both
+    ttft_samples: List[float] = field(default_factory=list)
     # raw trace-recorder events (simulate(..., trace=True) runs only;
     # virtual-clock timestamps — render with repro.obs.chrome_trace)
     trace: Optional[List[dict]] = None
@@ -479,6 +588,14 @@ class SimResult:
         if not self.itl_samples:
             return 0.0
         xs = sorted(self.itl_samples)
+        return xs[min(int(q * len(xs)), len(xs) - 1)]
+
+    def ttft_percentile(self, q: float) -> float:
+        """Time-to-first-token at quantile ``q``; 0.0 when nothing
+        emitted."""
+        if not self.ttft_samples:
+            return 0.0
+        xs = sorted(self.ttft_samples)
         return xs[min(int(q * len(xs)), len(xs) - 1)]
 
     @property
@@ -577,19 +694,26 @@ def simulate(workload: Workload, cost: CostModel,
     batch_log: List[Tuple[int, ...]] = []
     prefix_hits = prefix_saved = 0
     itl: List[float] = []
+    ttfts: List[float] = []
     chunk_lats: List[float] = []
     decode_lats: List[float] = []
+    disp = packs = segs = 0
     for p in pipelines:
         for s in p.finished:
             responses.append(Response(s.req_id, s.arrival_time,
                                       s.finish_time, s.batch_size,
                                       s.padded_len))
             itl.extend(s.inter_token_latencies())
+            if s.token_times:
+                ttfts.append(s.token_times[0] - s.arrival_time)
         batch_log.extend(p.batch_log)
         prefix_hits += p.backend.prefix_hits
         prefix_saved += p.backend.prefix_tokens_saved
         chunk_lats.extend(p.backend.chunk_latencies)
         decode_lats.extend(p.backend.decode_latencies)
+        disp += p.backend.prefill_dispatches
+        packs += p.backend.pack_dispatches
+        segs += p.backend.pack_segments
         for k in vars(stats):
             setattr(stats, k, getattr(stats, k) + getattr(p.stats, k))
     responses.sort(key=lambda r: (r.finish_time, r.req_id))
@@ -602,7 +726,10 @@ def simulate(workload: Workload, cost: CostModel,
                      stats=stats, prefix_hits=prefix_hits,
                      prefix_tokens_saved=prefix_saved, itl_samples=itl,
                      chunk_latencies=chunk_lats,
-                     decode_latencies=decode_lats, trace=events)
+                     decode_latencies=decode_lats,
+                     prefill_dispatches=disp, pack_dispatches=packs,
+                     pack_segments=segs, ttft_samples=ttfts,
+                     trace=events)
 
 
 def throughput_curve(rates: Sequence[float], cost: CostModel,

@@ -3,10 +3,11 @@ from repro.models.transformer import (DEFAULT_RUNTIME, ModelRuntime,
                                       decode_step, forward_hidden,
                                       forward_train, init_params, make_cache,
                                       make_paged_cache, prefill,
-                                      prefill_suffix)
+                                      prefill_packed, prefill_suffix)
 
 __all__ = [
     "DEFAULT_RUNTIME", "ModelRuntime", "abstract_params", "cache_specs",
     "decode_step", "forward_hidden", "forward_train", "init_params",
-    "make_cache", "make_paged_cache", "prefill", "prefill_suffix",
+    "make_cache", "make_paged_cache", "prefill", "prefill_packed",
+    "prefill_suffix",
 ]

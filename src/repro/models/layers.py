@@ -233,6 +233,42 @@ def attention_naive(cfg: ModelConfig, q, k, v, *, causal: bool = True,
     return out
 
 
+def attention_packed(cfg: ModelConfig, q, k, v, *, q_seg, k_seg,
+                     q_pos, k_pos) -> jax.Array:
+    """Segment-masked causal attention for packed prefill.
+
+    Many independent sequences are concatenated along the sequence axis:
+    q:(B,Sq,H,dh) holds the fresh tokens of every segment back to back,
+    k/v:(B,Sk,KV,dh) holds each segment's cached prefix followed by the
+    fresh keys (the last Sq keys line up with the queries).  ``q_seg`` /
+    ``k_seg`` (int32, (Sq,) / (Sk,)) carry the segment id per slot —
+    padding uses a negative id — and ``q_pos`` / ``k_pos`` the absolute
+    position within the owning sequence, so a chunk resuming at offset
+    ``off`` packs with positions ``off..`` exactly like the
+    ``prefill_suffix`` seam.  Key j is visible to query i iff both sit in
+    the same segment and ``k_pos[j] <= q_pos[i]``; every query also sees
+    its own fresh key so fully padded rows stay finite (their output is
+    never gathered).
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    k = expand_kv(k, h // kvh)
+    v = expand_kv(v, h // kvh)
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k) * scale
+    scores = scores.astype(jnp.float32)
+    same = q_seg[:, None] == k_seg[None, :]
+    causal = k_pos[None, :] <= q_pos[:, None]
+    self_key = (jnp.arange(sk)[None, :] - (sk - sq)) == \
+        jnp.arange(sq)[:, None]
+    mask = (same & causal) | self_key
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", w, v)
+    return out
+
+
 def attention_chunked(cfg: ModelConfig, q, k, v, *, causal: bool = True,
                       q_block: int = 512, kv_block: int = 1024,
                       q_offset: int = 0) -> jax.Array:

@@ -511,6 +511,82 @@ def prefill_suffix(cfg: ModelConfig, params: Params, tokens: jax.Array,
                           "v": v_suf.astype(cache_dtype)}
 
 
+def prefill_packed(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                   seg_ids: jax.Array, positions: jax.Array,
+                   last_idx: jax.Array, prefix_k: jax.Array,
+                   prefix_v: jax.Array, prefix_seg: jax.Array,
+                   prefix_pos: jax.Array, *,
+                   rt: ModelRuntime = DEFAULT_RUNTIME,
+                   cache_dtype=jnp.bfloat16):
+    """Prefill many independent sequences in ONE dispatch.
+
+    ``tokens`` (1, P) concatenates every segment's fresh (uncached)
+    tokens back to back, right-padded to the pack bucket; ``seg_ids``
+    (P,) carries the owning segment per slot (negative = padding) and
+    ``positions`` (P,) the absolute position within that segment — a
+    chunk resuming after ``off`` cached tokens contributes positions
+    ``off..``, composing with the ``prefill_suffix`` position-offset
+    seam so prefix-cache hits and resumable chunks pack alongside cold
+    prompts.  ``prefix_k``/``prefix_v`` (L, P_pre, KV, dh) concatenate
+    every segment's cached prefix KV (gathered from the paged pool) with
+    ``prefix_seg``/``prefix_pos`` (P_pre,) labelling those key slots the
+    same way; ``P_pre == 0`` is the all-cold case and skips the concat so
+    the compiled HLO matches.  Attention is causal *within* segments
+    (`attention_packed`), so each segment computes exactly what its own
+    sequential prefill would have.
+
+    Returns ``(logits, {"k", "v"})``: ``logits`` (N, V) gathered at
+    ``last_idx`` (N,) — each segment's last fresh token, padded entries
+    point anywhere harmless — and suffix-only cache parts
+    (L, P, KV, dh) for the caller to scatter into per-segment paged
+    blocks.  Attention families only, like ``prefill_suffix``.
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError("packed prefill is attention-only; SSM state "
+                         "rolls through padding and cannot pack")
+    if cfg.num_codebooks:
+        raise ValueError("packed prefill does not support codebook models")
+    h = embed_inputs(cfg, params, tokens)
+    pos_in = positions[None]                                  # (1, P)
+    if cfg.rope == "mrope":
+        pos_in = jnp.broadcast_to(pos_in[None], (3,) + pos_in.shape)
+    use_prefix = prefix_k.shape[1] > 0
+    if use_prefix:
+        k_seg = jnp.concatenate([prefix_seg, seg_ids])
+        k_pos = jnp.concatenate([prefix_pos, positions])
+    else:
+        k_seg, k_pos = seg_ids, positions
+
+    def block(carry, xs):
+        h = carry
+        blk, pk, pv = xs
+        hn = L.apply_norm(cfg, blk["norm1"], h)
+        q, k, v = L.qkv_project(cfg, blk["attn"], hn, pos_in)
+        if use_prefix:
+            k_all = jnp.concatenate([pk[None].astype(k.dtype), k], axis=1)
+            v_all = jnp.concatenate([pv[None].astype(v.dtype), v], axis=1)
+        else:
+            k_all, v_all = k, v
+        attn = L.attention_packed(cfg, q, k_all, v_all, q_seg=seg_ids,
+                                  k_seg=k_seg, q_pos=positions, k_pos=k_pos)
+        h = h + L.attention_output(blk["attn"], attn)
+        hn2 = L.apply_norm(cfg, blk["norm2"], h)
+        if cfg.family == "moe":
+            out, _ = M.apply_moe(cfg, blk["moe"], hn2)
+        else:
+            out = L.apply_ffn(cfg, blk["ffn"], hn2)
+        h = _residual_constrain(rt, h + out)
+        return h, (k[0], v[0])
+
+    h, (k_suf, v_suf) = lax.scan(
+        block, h, (params["layers"], prefix_k, prefix_v))
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    h_last = h[:, last_idx.astype(jnp.int32)]                 # (1, N, d)
+    logits = L.lm_logits(cfg, params["embed"], h_last)
+    return logits[0], {"k": k_suf.astype(cache_dtype),
+                       "v": v_suf.astype(cache_dtype)}
+
+
 # ---------------------------------------------------------------------------
 # Decode
 # ---------------------------------------------------------------------------

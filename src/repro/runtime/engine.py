@@ -37,7 +37,7 @@ from repro.core.pipeline import PipelineBackend
 from repro.core.serving import Request
 from repro.models import (ModelRuntime, DEFAULT_RUNTIME, decode_step,
                           forward_hidden, make_cache, make_paged_cache,
-                          prefill, prefill_suffix)
+                          prefill, prefill_packed, prefill_suffix)
 from repro.models.layers import lm_logits
 from repro.runtime import sanitizer
 from repro.runtime.bucketing import BucketLadder
@@ -449,6 +449,79 @@ class InferenceEngine:
         return self._finish_gen_state(logits, cache, n, batch_b, budgets,
                                       eos_ids, cap, sampling)
 
+    def _packed_fn(self, pack_b: int, pre_b: int, seg_b: int) -> Callable:
+        """Compiled packed prefill, one cell per (pack bucket, prefix
+        bucket, segment-slots bucket).  All three are ladder outputs —
+        the pack/prefix buckets come from ``BucketLadder.pack_bucket``
+        (doubling past the top seq bucket) and the segment slots from
+        the batch ladder — so the compiled-cell set stays bounded."""
+        key = ("pack", pack_b, pre_b, seg_b)
+        if key not in self._prefill_cache:
+            cfg, rt = self.cfg, self.rt
+
+            @jax.jit
+            def pf(params, tokens, seg_ids, positions, last_idx,
+                   prefix_k, prefix_v, prefix_seg, prefix_pos):
+                return prefill_packed(
+                    cfg, params, tokens, seg_ids, positions, last_idx,
+                    prefix_k, prefix_v, prefix_seg, prefix_pos, rt=rt,
+                    cache_dtype=jnp.float32)
+
+            self._prefill_cache[key] = pf
+            self.compile_count += 1
+        return self._prefill_cache[key]
+
+    def prefill_packed_flat(self, suffixes: Sequence[Sequence[int]],
+                            offsets: Sequence[int], prefix_k, prefix_v,
+                            prefix_seg, prefix_pos):
+        """ONE device dispatch prefilling many independent segments.
+
+        ``suffixes[i]`` is segment i's fresh (uncached) tokens and
+        ``offsets[i]`` how many of its tokens are already cached — the
+        segment's queries run at positions ``offsets[i]..`` against its
+        own prefix slots in ``prefix_k``/``prefix_v`` (L, P_pre, KV, dh:
+        every segment's cached prefix concatenated, labelled by
+        ``prefix_seg``/``prefix_pos``).  Everything is padded here to
+        (pack, prefix, segment) buckets so callers never mint new cells.
+
+        Returns ``(logits, parts)``: per-segment last-token logits
+        (seg_b, V) — rows past ``len(suffixes)`` are padding — and flat
+        suffix KV (L, pack_b, KV, dh) laid out exactly as the
+        concatenated suffixes, for per-segment scatter into paged blocks.
+        """
+        n = len(suffixes)
+        lens = [len(s) for s in suffixes]
+        if min(lens) < 1:
+            raise ValueError("every packed segment needs >= 1 fresh token")
+        flat = sum(lens)
+        pack_b = self.ladder.pack_bucket(flat)
+        seg_b = self.ladder.batch_bucket(n)
+        toks = np.full((1, pack_b), self.pad_id, np.int32)
+        seg_ids = np.full((pack_b,), -1, np.int32)
+        positions = np.zeros((pack_b,), np.int32)
+        last_idx = np.zeros((seg_b,), np.int32)
+        at = 0
+        for i, (s, off) in enumerate(zip(suffixes, offsets)):
+            toks[0, at:at + len(s)] = s
+            seg_ids[at:at + len(s)] = i
+            positions[at:at + len(s)] = np.arange(off, off + len(s))
+            last_idx[i] = at + len(s) - 1
+            at += len(s)
+        pre = int(prefix_k.shape[1])
+        pre_b = self.ladder.pack_bucket(pre) if pre else 0
+        if pre_b > pre:
+            pad = [(0, 0)] * prefix_k.ndim
+            pad[1] = (0, pre_b - pre)
+            prefix_k = jnp.pad(prefix_k, pad)
+            prefix_v = jnp.pad(prefix_v, pad)
+            prefix_seg = jnp.pad(prefix_seg, (0, pre_b - pre),
+                                 constant_values=-1)
+            prefix_pos = jnp.pad(prefix_pos, (0, pre_b - pre))
+        return self._packed_fn(pack_b, pre_b, seg_b)(
+            self.params, jnp.asarray(toks), jnp.asarray(seg_ids),
+            jnp.asarray(positions), jnp.asarray(last_idx),
+            prefix_k, prefix_v, prefix_seg, prefix_pos)
+
     def decode_step_batch(self, state: GenState) -> GenState:
         """One decode tick for every live row of ``state`` — entirely on
         device; finished rows are frozen.  Greedy-only states run the
@@ -600,7 +673,8 @@ class ContinuousEngine(PipelineBackend):
                  kv_layout: str = "paged",
                  block_size: int = DEFAULT_KV_BLOCK,
                  num_blocks: Optional[int] = None,
-                 prefix_cache: bool = False) -> None:
+                 prefix_cache: bool = False,
+                 packed_prefill: bool = True) -> None:
         cfg = engine.cfg
         if cfg.num_codebooks:
             raise ValueError("ContinuousEngine supports single-codebook "
@@ -626,6 +700,16 @@ class ContinuousEngine(PipelineBackend):
         self.prefix_cache: Optional[RadixPrefixCache] = None
         self.prefill_tokens = 0      # tokens actually run through prefill
         self.cow_blocks = 0          # copy-on-write block copies made
+        # packed prefill: many segments (admissions and/or chunks) per
+        # device dispatch.  False keeps the sequential per-group path —
+        # the equivalence baseline the packed path is tested against.
+        self.packed_prefill = packed_prefill
+        self.prefill_dispatches = 0  # prefill device dispatches issued
+        self.pack_dispatches = 0     # ... of which were packed
+        self.pack_segments = 0       # segments across all packed ones
+        # pack ledger: req_id -> pool blocks the most recent packed
+        # dispatch scattered into (check_invariants audits ownership)
+        self._last_pack: Dict[int, List[int]] = {}
         if kv_layout == "paged":
             if max_len is None:
                 max_len = engine.ladder.seq_buckets[-1]
@@ -682,6 +766,7 @@ class ContinuousEngine(PipelineBackend):
         already maintains — no device value is ever read."""
         m.gauge("engine.compile_count").set(self.engine.compile_count)
         m.gauge("engine.prefill_tokens").set(self.prefill_tokens)
+        m.gauge("engine.prefill_dispatches").set(self.prefill_dispatches)
         m.gauge("engine.decode_ticks").set(self.decode_ticks)
         m.gauge("engine.cow_blocks").set(self.cow_blocks)
         for k, v in self.engine.kv_slab.metrics().items():
@@ -832,6 +917,21 @@ class ContinuousEngine(PipelineBackend):
             raise sanitizer.SanitizerError(
                 f"reservations held for sessions {sorted(stray_resv)} "
                 "that are neither live nor chunking")
+        # pack ledger: every block the most recent packed dispatch wrote
+        # must still be owned by the segment it was written for (a freed
+        # or re-assigned block would mean the pack scattered into memory
+        # another request now owns).  The ledger tracks ownership moves:
+        # a copy-on-write swaps the recorded id for the private copy, and
+        # a freed session's entry is dropped with its table.
+        for req, blocks in self._last_pack.items():
+            if not btm.has_request(req):
+                continue
+            owned = set(btm.block_table(req))
+            stray_blocks = [b for b in blocks if b not in owned]
+            if stray_blocks:
+                raise sanitizer.SanitizerError(
+                    f"pack ledger: session {req} no longer owns blocks "
+                    f"{stray_blocks} its packed prefill scattered into")
         if isinstance(btm, sanitizer.SanitizedBlockTableManager):
             btm.check_conservation()
             if pipeline.idle():
@@ -842,6 +942,12 @@ class ContinuousEngine(PipelineBackend):
 
     def prefill_batch(self, sessions: List[Session],
                       padded_len: int) -> None:
+        if self.supports_packed_prefill():
+            # one flat dispatch for the whole admission group, prefix
+            # hits included — heterogeneous cached lengths no longer
+            # split into one padded dispatch per cached-length part
+            self.prefill_pack(sessions, [])
+            return
         eng = self.engine
         # everything that can fail is checked BEFORE any device-state or
         # slab mutation — a partial prefill must not poison the slot cache
@@ -944,8 +1050,11 @@ class ContinuousEngine(PipelineBackend):
                                        part_matches)
                 else:
                     self._splice(rows, part_slots)
+                self.prefill_dispatches += 1
                 self.prefill_tokens += sum(s.seq_len - cached
                                            for s in part_sessions)
+                for s in part_sessions:
+                    s.cached_tokens = cached
         except Exception:
             # a failed part must not leak the batch's tables or the
             # matcher's holds: free() is a safe no-op for sessions that
@@ -1098,6 +1207,34 @@ class ContinuousEngine(PipelineBackend):
             for temp in (0.0, 0.8):
                 self._warm_round(plen, 3, n, temperature=temp)
                 rounds += 1
+            if self.supports_packed_prefill():
+                # admission packs above warmed the prefix-free packed
+                # cells; chunk packs also gather each segment's own
+                # prefix KV, so warm one with-prefix cell too — the
+                # first resumable chunk pays no JIT
+                ks = self.state.cache["k"].shape   # (L, NB, BS, KV, dh)
+                bs = self.block_size
+                pre = jnp.zeros((ks[0], 2 * bs) + ks[3:],
+                                self.state.cache["k"].dtype)
+                pre_seg = jnp.asarray(
+                    np.repeat(np.arange(2, dtype=np.int32), bs))
+                pre_pos = jnp.asarray(
+                    np.tile(np.arange(bs, dtype=np.int32), 2))
+                eng.prefill_packed_flat(
+                    [[1] * bs, [2] * bs], [bs, bs], pre, pre, pre_seg,
+                    pre_pos)
+                rounds += 1
+                # admission rounds above packed n segments of ~bucket
+                # length each, landing in the LARGE pack buckets; real
+                # traffic also packs n tiny prompts into the smallest
+                # bucket, so warm that cell per segment-slot count
+                zero = jnp.zeros((ks[0], 0) + ks[3:],
+                                 self.state.cache["k"].dtype)
+                zseg = jnp.asarray(np.zeros((0,), np.int32))
+                for n in sizes:
+                    eng.prefill_packed_flat([[1]] * n, [0] * n, zero,
+                                            zero, zseg, zseg)
+                    rounds += 1
         finally:
             # all warm rows are done; a fresh greedy admission must get
             # the pure-argmax tick back
@@ -1155,6 +1292,328 @@ class ContinuousEngine(PipelineBackend):
 
     def chunk_quantum(self) -> int:
         return self.block_size
+
+    # -- packed prefill --------------------------------------------------
+    def supports_packed_prefill(self) -> bool:
+        """Packed prefill concatenates many segments into one flat
+        dispatch and scatters per-segment KV into paged blocks, so it
+        needs the paged layout; that already excludes SSM/hybrid, whose
+        state rolls through padding and keeps the equal-length
+        sequential fallback."""
+        return self.kv_layout == "paged" and self.packed_prefill
+
+    def pack_bucket(self, flat_tokens: int) -> int:
+        """Pack bucket a flat token count pads to (the occupancy
+        histogram's denominator)."""
+        return self.engine.ladder.pack_bucket(flat_tokens)
+
+    def prefill_pack(self, admissions: List[Session],
+                     chunks: List[Tuple[Session, int]],
+                     decoding: Optional[List[Session]] = None) -> None:
+        """ONE packed device dispatch serving a whole pack group:
+        ``admissions`` (newly planned sessions — whole prompts, or
+        uncached suffixes on a prefix-cache hit) and ``chunks``
+        (``(session, upto)`` next-chunk advances for resumable
+        prefills), concatenated with segment ids and per-token
+        positions, prefilled once, then scattered into each session's
+        own block table (`sanitizer.check_write` on every segment's
+        exact block range).  Admissions and final chunks seed their
+        decode rows from their segment's last-token logits and splice
+        into the slot cache together.
+
+        ``decoding`` (only legal when nothing in the pack splices) fuses
+        the decode tick behind the pack the way ``chunk_decode_tick``
+        does — both dispatch back-to-back as one async group.
+        """
+        eng = self.engine
+        if not self.supports_packed_prefill():
+            raise ValueError("packed prefill requires kv_layout='paged' "
+                             "with packed_prefill enabled")
+        if not admissions and not chunks:
+            return
+        # ---- admission pre-checks (nothing mutated before they pass) --
+        over = [s.req_id for s in admissions
+                if s.max_new_tokens > self.cap_new]
+        if over:
+            raise ValueError(
+                f"sessions {over} exceed the emission buffer "
+                f"(max_new_tokens > cap_new={self.cap_new}); raise "
+                f"cap_new or lower the budget")
+        dup = [s.req_id for s in admissions
+               if eng.kv_slab.has_region(s.req_id)]
+        if dup:
+            raise ValueError(f"req_ids {dup} already hold KV regions "
+                             "(duplicate in-flight submission?)")
+        if admissions:
+            need = eng.ladder.seq_bucket(
+                max(s.total_len for s in admissions))
+            self._ensure_state(need)
+        taken = set(self._chunk_slots.values())
+        slots = [i for i, s in enumerate(self.sessions)
+                 if s is None and i not in taken][:len(admissions)]
+        assert len(slots) == len(admissions), "admitted beyond free slots"
+        matches: Optional[List[PrefixMatch]] = None
+        if self.prefix_cache is not None and admissions:
+            matches = [self.prefix_cache.match(list(s.prompt))
+                       for s in admissions]
+        btm = self.block_table
+        if admissions:
+            want = 0
+            for i, s in enumerate(admissions):
+                covered = len(matches[i].full_blocks) if matches else 0
+                want += btm.blocks_needed(s.total_len) - covered
+            deficit = want + sum(self._reserved.values()) - \
+                btm.free_blocks
+            if deficit > 0 and self.prefix_cache is not None:
+                deficit -= self.prefix_cache.evict(deficit)
+            if deficit > 0:
+                if matches:
+                    for m in matches:
+                        self.prefix_cache.release(m)
+                raise ValueError(
+                    f"packed prefill needs {want} fresh KV blocks beyond "
+                    f"reservations, pool has {btm.free_blocks} free — "
+                    "the admission planner should have vetoed this pack")
+        # ---- chunk validation + block ensure (reserved at admission,
+        # so ensure cannot exhaust the pool) -----------------------------
+        for s, upto in chunks:
+            req = s.req_id
+            off = s.prefilled_tokens
+            if req not in self._chunk_slots:
+                raise ValueError(f"session {req} has no chunked prefill "
+                                 "in flight")
+            if not off < upto <= s.seq_len:
+                raise ValueError(f"chunk [{off}, {upto}) out of range "
+                                 f"for prompt length {s.seq_len}")
+            final = upto == s.seq_len
+            cover = min(s.seq_len + 1, s.total_len) if final else upto
+            fresh = btm.ensure(req, cover)
+            if fresh:
+                self._reserved[req] = max(
+                    self._reserved[req] - len(fresh), 0)
+        # ---- segment descriptors: admissions first, then chunks -------
+        # (suffix tokens, position offset, prefix pool indices)
+        bs = self.block_size
+        suffixes: List[List[int]] = []
+        offsets: List[int] = []
+        pre_fidx: List[np.ndarray] = []
+        pre_seg: List[np.ndarray] = []
+        pre_pos: List[np.ndarray] = []
+
+        def add_prefix(seg: int, blocks: List[int], length: int) -> None:
+            pos = np.arange(length)
+            ids = np.asarray(blocks, np.int32)
+            pre_fidx.append(ids[pos // bs] * bs + pos % bs)
+            pre_seg.append(np.full((length,), seg, np.int32))
+            pre_pos.append(pos.astype(np.int32))
+
+        for i, s in enumerate(admissions):
+            cached = matches[i].cached_tokens if matches else 0
+            suffixes.append(list(s.prompt)[cached:])
+            offsets.append(cached)
+            if cached:
+                blocks = list(matches[i].full_blocks)
+                if matches[i].tail_block is not None:
+                    blocks.append(matches[i].tail_block)
+                add_prefix(i, blocks, cached)
+        for j, (s, upto) in enumerate(chunks):
+            off = s.prefilled_tokens
+            suffixes.append(list(s.prompt)[off:upto])
+            offsets.append(off)
+            if off:
+                add_prefix(len(admissions) + j,
+                           list(btm.block_table(s.req_id)), off)
+        # ---- gather every segment's prefix KV in one pool read --------
+        st = self.state
+        k_pool, v_pool = st.cache["k"], st.cache["v"]
+        pool_blocks = k_pool.shape[1]
+        flat_shape = (k_pool.shape[0], pool_blocks * bs) + \
+            k_pool.shape[3:]
+        if pre_fidx:
+            gidx = jnp.asarray(np.concatenate(pre_fidx))
+            prefix_k = k_pool.reshape(flat_shape)[:, gidx]
+            prefix_v = v_pool.reshape(flat_shape)[:, gidx]
+            prefix_seg = jnp.asarray(np.concatenate(pre_seg))
+            prefix_pos = jnp.asarray(np.concatenate(pre_pos))
+        else:
+            prefix_k = jnp.zeros(
+                (k_pool.shape[0], 0) + k_pool.shape[3:], k_pool.dtype)
+            prefix_v = prefix_k
+            prefix_seg = jnp.zeros((0,), jnp.int32)
+            prefix_pos = jnp.zeros((0,), jnp.int32)
+        try:
+            # ---- THE dispatch -----------------------------------------
+            logits, parts = eng.prefill_packed_flat(
+                suffixes, offsets, prefix_k, prefix_v, prefix_seg,
+                prefix_pos)
+            # ---- allocate admission tables (prefix refs adopted, tail
+            # copy-on-write) and collect every segment's scatter target -
+            cache = dict(st.cache)
+            k_pool, v_pool = cache["k"], cache["v"]
+            tables = cache["block_tables"]
+            tgt: List[np.ndarray] = []
+            pack_ledger: Dict[int, List[int]] = {}
+            written: set = set()
+            seg_bids: List[List[int]] = []
+            for i, s in enumerate(admissions):
+                m = matches[i] if matches is not None else None
+                cached = 0
+                prefix_blocks: List[int] = []
+                if m is not None:
+                    m.consumed = True   # holds transfer to the table
+                    cached = m.cached_tokens
+                    prefix_blocks = list(m.full_blocks)
+                    if m.tail_block is not None:
+                        try:
+                            cow = btm.take(1)[0]
+                        except BlockExhausted:
+                            for b in prefix_blocks:
+                                btm.unref(b)
+                            btm.unref(m.tail_block)
+                            raise
+                        k_pool = k_pool.at[:, cow].set(
+                            k_pool[:, m.tail_block])
+                        v_pool = v_pool.at[:, cow].set(
+                            v_pool[:, m.tail_block])
+                        btm.unref(m.tail_block)
+                        prefix_blocks.append(cow)
+                        self.cow_blocks += 1
+                alloc_tokens = min(s.seq_len + 1, s.total_len)
+                try:
+                    bids = btm.allocate(s.req_id, alloc_tokens,
+                                        prefix_blocks=prefix_blocks)
+                except BlockExhausted:
+                    for b in prefix_blocks:
+                        btm.unref(b)
+                    raise
+                self._reserved[s.req_id] = max(
+                    btm.blocks_needed(s.total_len) - len(bids), 0)
+                seg_bids.append(bids)
+            for s, upto in chunks:
+                seg_bids.append(btm.block_table(s.req_id))
+            spans = [(s, off, s.seq_len)
+                     for s, off in zip(admissions, offsets)] + \
+                    [(s, s.prefilled_tokens, upto) for s, upto in chunks]
+            for (s, off, end), bids in zip(spans, seg_bids):
+                seg_blocks = bids[off // bs:(end - 1) // bs + 1]
+                sanitizer.check_write(btm, s.req_id, seg_blocks)
+                overlap = [b for b in seg_blocks if b in written]
+                if overlap:
+                    raise sanitizer.SanitizerError(
+                        f"pack segments overlap on blocks {overlap} "
+                        f"(session {s.req_id}) — cross-request KV "
+                        "corruption")
+                written.update(seg_blocks)
+                pack_ledger[s.req_id] = list(seg_blocks)
+                pos = np.arange(off, end)
+                tgt.append(np.asarray(bids, np.int32)[pos // bs] * bs +
+                           pos % bs)
+            # ---- ONE scatter: the flat pack lines up with the
+            # concatenated per-segment targets ---------------------------
+            flat = sum(len(s) for s in suffixes)
+            fidx = jnp.asarray(np.concatenate(tgt))
+            k_pool = k_pool.reshape(flat_shape).at[:, fidx].set(
+                parts["k"][:, :flat]).reshape(k_pool.shape)
+            v_pool = v_pool.reshape(flat_shape).at[:, fidx].set(
+                parts["v"][:, :flat]).reshape(v_pool.shape)
+            cache["k"], cache["v"] = k_pool, v_pool
+            # ---- splice decode rows: admissions + final chunks --------
+            splicers: List[Tuple[int, int, Session]] = []
+            for i, (slot, s) in enumerate(zip(slots, admissions)):
+                splicers.append((i, slot, s))
+            for j, (s, upto) in enumerate(chunks):
+                if upto == s.seq_len:
+                    splicers.append((len(admissions) + j,
+                                     self._chunk_slots[s.req_id], s))
+            if splicers:
+                ns = len(splicers)
+                batch_b = eng.ladder.batch_bucket(ns)
+                sel = jnp.asarray(np.array(
+                    [seg for seg, _, _ in splicers] +
+                    [0] * (batch_b - ns), np.int32))
+                ctl_cache = {
+                    "len": jnp.asarray(np.array(
+                        [s.seq_len for _, _, s in splicers] +
+                        [1] * (batch_b - ns), np.int32)),
+                    "pos_offset": jnp.zeros((batch_b,), jnp.int32),
+                }
+                rows = eng._finish_gen_state(
+                    logits[sel], ctl_cache, ns, batch_b,
+                    budgets=[s.max_new_tokens for _, _, s in splicers],
+                    eos_ids=[s.eos_id for _, _, s in splicers],
+                    cap=self.cap_new,
+                    sampling=[s.params for _, _, s in splicers])
+                for (seg, slot, s) in splicers:
+                    row = np.zeros((self.max_blocks,), np.int32)
+                    bids = seg_bids[seg]
+                    row[:len(bids)] = bids
+                    tables = tables.at[slot].set(jnp.asarray(row))
+                cache["block_tables"] = tables
+                idx = jnp.asarray(np.array(
+                    [slot for _, slot, _ in splicers], np.int32))
+                for key in _BATCH_AXIS0:
+                    cache[key] = cache[key].at[idx].set(
+                        _rows(rows.cache[key], key, ns))
+                self.state = self._spliced(cache, rows, idx, ns)
+            else:
+                self.state = replace(st, cache=cache)
+        except Exception:
+            # mirror prefill_batch's sweep: free admission tables and
+            # holds, neutralize any slot whose row state may have been
+            # touched; chunk sessions keep their reservations — the
+            # pipeline aborts them explicitly
+            bad_slots: List[int] = []
+            for i, s in enumerate(admissions):
+                if btm.has_request(s.req_id):
+                    bad_slots.append(slots[i])
+                    btm.free(s.req_id)
+                    self._reserved.pop(s.req_id, None)
+                if matches is not None:
+                    self.prefix_cache.release(matches[i])
+            if bad_slots and self.state is not None:
+                bst = self.state
+                bidx = jnp.asarray(np.array(bad_slots, np.int32))
+                bcache = dict(bst.cache)
+                bcache["block_tables"] = \
+                    bcache["block_tables"].at[bidx].set(0)
+                self.state = replace(bst, cache=bcache,
+                                     done=bst.done.at[bidx].set(True))
+            raise
+        # ---- host bookkeeping -----------------------------------------
+        self._last_pack = pack_ledger
+        self.prefill_dispatches += 1
+        self.pack_dispatches += 1
+        self.pack_segments += len(suffixes)
+        self.prefill_tokens += flat
+        now = self.clock()
+        per_tok = kv_bytes_per_token(eng.cfg)
+        for i, (slot, s) in enumerate(zip(slots, admissions)):
+            cached = matches[i].cached_tokens if matches else 0
+            s.cached_tokens = cached
+            self.sessions[slot] = s
+            self._slot_len[slot] = s.seq_len
+            eng.kv_slab.allocate(s.req_id, max(per_tok * s.total_len, 1),
+                                 tokens=s.total_len)
+            s.start_decode(now, slot=slot)
+        finals: List[Session] = []
+        for s, upto in chunks:
+            s.prefilled_tokens = upto
+            if upto == s.seq_len:
+                slot = self._chunk_slots.pop(s.req_id)
+                self.sessions[slot] = s
+                self._slot_len[slot] = s.seq_len
+                s.start_decode(now, slot=slot)
+                finals.append(s)
+        if self.prefix_cache is not None and (admissions or finals):
+            self._donate_prompts(list(admissions) + finals)
+        if admissions or finals:
+            # a budget-1 or instant-EOS prompt may be done already
+            self._sync()
+            self._publish_stream()
+        if decoding is not None:
+            assert not admissions and not finals, \
+                "fused pack+decode is only legal for non-splicing packs"
+            self.decode_tick(decoding)
 
     def begin_prefill_chunks(self, session: Session) -> None:
         """Reserve everything the resumable prefill will need — a decode
@@ -1284,6 +1743,7 @@ class ContinuousEngine(PipelineBackend):
         cache["k"], cache["v"] = k_pool, v_pool
         self.state = replace(st, cache=cache)
         session.prefilled_tokens = upto
+        self.prefill_dispatches += 1
         self.prefill_tokens += upto - off
         if not final:
             return
@@ -1321,6 +1781,7 @@ class ContinuousEngine(PipelineBackend):
             self.block_table.free(req)
         self._reserved.pop(req, None)
         self._chunk_slots.pop(req, None)
+        self._last_pack.pop(req, None)
         if self.engine.kv_slab.has_region(req):
             self.engine.kv_slab.free(req)
             self.engine.kv_slab.gc()
@@ -1348,6 +1809,7 @@ class ContinuousEngine(PipelineBackend):
         if self.block_table is not None:
             self.block_table.free(session.req_id)
             self._reserved.pop(session.req_id, None)
+        self._last_pack.pop(session.req_id, None)
         self.sessions[slot] = None
         self._slot_len[slot] = 0
         cache = dict(st.cache)
@@ -1643,6 +2105,12 @@ class ContinuousEngine(PipelineBackend):
                     self._reserved[s.req_id] = max(
                         self._reserved.get(s.req_id, 0) - 1, 0)
                     self.cow_blocks += 1
+                    if s.req_id in self._last_pack:
+                        # the packed KV was copied with the block: the
+                        # ledger follows ownership to the private copy
+                        self._last_pack[s.req_id] = [
+                            new if b == bid else b
+                            for b in self._last_pack[s.req_id]]
                     cow_old.append(bid)
                     cow_new.append(new)
                     upd_slots.append(slot)
@@ -1689,6 +2157,7 @@ class ContinuousEngine(PipelineBackend):
             if self.block_table is not None:
                 self.block_table.free(s.req_id)
                 self._reserved.pop(s.req_id, None)
+            self._last_pack.pop(s.req_id, None)
             self.sessions[slot] = None
             self._slot_len[slot] = 0
             freed_slots.append(slot)

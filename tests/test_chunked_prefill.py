@@ -274,8 +274,11 @@ def test_chunked_one_shot_long_prompt_finishes_at_final_chunk():
 
 
 def test_chunk_failure_finishes_session_terminally():
+    # Pinned to the sequential per-chunk path (packed turns dispatch
+    # through prefill_pack; their group failure sweep is covered in
+    # test_packed_prefill.py).
     cfg = SimConfig(policy="dp", chunked_prefill=True,
-                    prefill_chunk_tokens=16)
+                    prefill_chunk_tokens=16, packed_prefill=False)
     pipe, _ = _virtual_pipeline(cfg)
     pipe.submit(Session(0, 8, 0.0, max_new_tokens=8))
     pipe.tick()

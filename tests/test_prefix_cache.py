@@ -399,10 +399,14 @@ def test_failed_part_neutralizes_spliced_rows(engine, monkeypatch):
     """Regression (review): when a later part of a multi-group admission
     fails, the already-spliced parts' tables are freed — their device
     rows must be pointed at the trash block and frozen, or they would
-    keep writing KV into blocks later admissions reuse."""
+    keep writing KV into blocks later admissions reuse.  Pinned to the
+    sequential per-part path (packed admissions dispatch once and have
+    no partial-splice window; their failure sweep is covered in
+    test_packed_prefill.py)."""
     import numpy as np
     ce = ContinuousEngine(engine, max_slots=4, cap_new=16,
-                          kv_layout="paged", prefix_cache=True)
+                          kv_layout="paged", prefix_cache=True,
+                          packed_prefill=False)
     sys_ = _system(ce)
     warm = Session(0, 33, 0.0, prompt=SYS + [40], max_new_tokens=2)
     sys_.submit(warm)
