@@ -25,7 +25,7 @@ Every run writes a machine-readable trajectory to ``BENCH_serving.json``
 the file schema valid on every push; the paper-claim assertions only run
 at full scale.
 
-``BENCH_serving.json`` schema (``bench_serving/v8``).  ``observability``
+``BENCH_serving.json`` schema (``bench_serving/v9``).  ``observability``
 section (real engine, the `repro.obs` registry + trace recorder)::
 
     observability:
@@ -113,6 +113,21 @@ section (real engine, the `repro.obs` registry + trace recorder)::
                                  # bit-identical (asserted)
         prefill_dispatches:      # per mode; packed strictly fewer
         pack_dispatches / pack_segments
+
+``replica_pool`` section (cluster tier, `repro.cluster.ReplicaPool`)::
+
+    replica_pool:
+      sim_scaling:               # 1 vs 2 vs 4 virtual replicas on one
+                                 # bursty capacity-bound workload;
+                                 # scale_2rep asserted >= 1.5x
+      routing_ab:                # affinity vs random hit rate on
+                                 # cohorted prefix traffic (affinity
+                                 # asserted >= random)
+      failover:                  # kill 1 of 2 replicas mid-run:
+                                 # finished_on_siblings / resubmitted /
+                                 # failed_mid_decode + host recovery s
+      real_engine:               # 1 vs 2 real replicas, wall tok/s
+                                 # (shared device; reported only)
 """
 from __future__ import annotations
 
@@ -856,10 +871,176 @@ def bench_observability(payload: dict) -> None:
          f"ratio_{ratio:.3f}_{len(rec.events)}events")
 
 
+def bench_replica_pool(payload: dict, smoke: bool) -> None:
+    """Cluster tier through the real `repro.cluster.ReplicaPool`.
+
+    Four studies, all over the unchanged `TurboClient` API:
+
+    * sim scaling — the same capacity-bound bursty workload through 1,
+      2, and 4 virtual replicas; tok/s from `virtual_makespan()`.  The
+      2-replica pool must reach >= 1.5x the single-replica rate (this
+      runs in smoke too: the virtual clock makes it deterministic).
+    * routing A/B — cohorted prefix traffic under ``routing="affinity"``
+      vs ``routing="random"``; hit rate = pool.affinity_hits / routed.
+      Affinity must beat (or tie) random.
+    * failover recovery — kill one of two replicas mid-run; report how
+      many sessions were resubmitted vs failed and the host-side
+      recovery latency of the failover itself.
+    * real engine 1-vs-2 — wall-clock tok/s on a bursty mixed workload
+      over real `ContinuousEngine` replicas sharing one compiled
+      engine.  Reported without an assert: on a single local device the
+      replicas time-share the same chip, so this measures the pool's
+      host overhead, not device scaling.
+    """
+    import random as _random
+
+    import jax
+    from repro.api import GenerationParams, TurboClient
+    from repro.cluster import ReplicaFailure, ReplicaPool
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+    from repro.runtime import BucketLadder, InferenceEngine
+    from repro.runtime.engine import ContinuousEngine
+
+    section: dict = {}
+
+    # ---- sim scaling: 1 vs 2 vs 4 virtual replicas -------------------
+    # capacity-bound regime (4 decode slots per replica): one replica
+    # serializes admission waves the pool runs concurrently.  Uncapped
+    # batching would hide scaling behind the per-tick overhead term.
+    cfg = SimConfig(max_decode_slots=4)
+    gen_tokens = 24
+    params = GenerationParams(max_new_tokens=gen_tokens)
+    rng = _random.Random(7)
+    prompts = []
+    for i in range(24):                   # bursty mix: 3 cohorts + tail
+        if rng.random() < 0.75:
+            g = rng.randrange(3)
+            prompts.append([g + 1] * 16 +
+                           [100 + g] + [i + 1] * rng.randrange(2, 16))
+        else:
+            prompts.append([200 + i] * rng.randrange(8, 40))
+
+    def sim_tok_per_s(replicas: int) -> float:
+        with TurboClient.simulated(cost_model=TURBO_CM, sim_config=cfg,
+                                   replicas=replicas) as p:
+            for pr in prompts:
+                p.submit(list(pr), params)
+            done = p.drain()
+            makespan = p.virtual_makespan() if replicas > 1 else p.clock()
+        assert len(done) == len(prompts)
+        return len(done) * gen_tokens / makespan
+
+    tps = {n: sim_tok_per_s(n) for n in (1, 2, 4)}
+    scale2, scale4 = tps[2] / tps[1], tps[4] / tps[1]
+    section["sim_scaling"] = {
+        "requests": len(prompts), "gen_tokens": gen_tokens,
+        "tok_per_s": {str(n): v for n, v in tps.items()},
+        "scale_2rep": scale2, "scale_4rep": scale4}
+    emit("replica_pool_sim_scaling", 0.0,
+         f"2rep_{scale2:.2f}x_4rep_{scale4:.2f}x")
+    assert scale2 >= 1.5, \
+        f"2 virtual replicas only {scale2:.2f}x one (want >= 1.5x)"
+
+    # ---- routing A/B: affinity vs random hit rate --------------------
+    cohort = [[(g + 1) * 3] * 32 for g in range(4)]
+
+    def hit_rate(routing: str) -> float:
+        clients = [TurboClient.simulated(cost_model=TURBO_CM,
+                                         sim_config=cfg)
+                   for _ in range(4)]
+        pool = ReplicaPool(clients, routing=routing, seed=11)
+        with pool:
+            # warm each cohort's home replica first so followers can hit
+            heads = [pool.submit(cohort[g] + [70 + g], params)
+                     for g in range(4)]
+            pool.drain()
+            for i in range(24):
+                g = i % 4
+                pool.submit(cohort[g] + [80 + g, i], params)
+            pool.drain()
+            c = pool.metrics()["counters"]
+            assert all(h.done for h in heads)
+            return c["pool.affinity_hits"] / max(1, c["pool.routed"])
+
+    aff, rnd = hit_rate("affinity"), hit_rate("random")
+    section["routing_ab"] = {"affinity_hit_rate": aff,
+                             "random_hit_rate": rnd, "replicas": 4}
+    emit("replica_pool_routing", 0.0,
+         f"affinity_{aff:.2f}_random_{rnd:.2f}_hit_rate")
+    assert aff >= rnd, \
+        f"affinity hit rate {aff:.2f} below random {rnd:.2f}"
+
+    # ---- failover recovery: kill one of two replicas mid-run ---------
+    with TurboClient.simulated(cost_model=TURBO_CM, sim_config=cfg,
+                               replicas=2) as pool:
+        hs = [pool.submit(list(p), params) for p in prompts[:12]]
+        pool.pump(max_ticks=2)            # some sessions reach DECODE
+        victim = hs[0].replica
+        t0 = time.perf_counter()
+        pool.kill_replica(victim, reason="bench kill")
+        recovery_s = time.perf_counter() - t0
+        pool.drain()
+        ok = lost = 0
+        for h in hs:
+            try:
+                h.result()
+                ok += 1
+            except ReplicaFailure:
+                lost += 1
+        c = pool.metrics()["counters"]
+    assert ok + lost == len(hs)
+    assert c["pool.failover_resubmitted"] + c["pool.failed_sessions"] >= 1
+    section["failover"] = {
+        "requests": len(hs), "finished_on_siblings": ok,
+        "failed_mid_decode": lost,
+        "resubmitted": c["pool.failover_resubmitted"],
+        "recovery_host_seconds": recovery_s}
+    emit("replica_pool_failover", recovery_s,
+         f"{ok}ok_{lost}lost_resub_{c['pool.failover_resubmitted']}")
+
+    # ---- real engine: 1 vs 2 replicas, wall-clock tok/s --------------
+    rcfg = get_smoke_config("internlm2-1.8b")
+    rparams = init_params(rcfg, jax.random.key(0))
+    eng = InferenceEngine(rcfg, rparams, ladder=BucketLadder(
+        seq_buckets=(32, 64), batch_buckets=(1, 2, 4)))
+    cm = AnalyticCostModel(flops_per_token=1e6, bytes_per_token=1e3,
+                           weight_bytes=1e6, overhead=1e-4)
+    real_new = 8
+    real_prompts = [[g + 1] * 12 + [40 + i] for i, g in
+                    enumerate([0, 0, 1, 1, 0, 1, 2, 2])]
+    gp = GenerationParams(max_new_tokens=real_new)
+
+    def real_tok_per_s(replicas: int) -> float:
+        clients = [TurboClient(
+            ContinuousEngine(eng, max_slots=4, cap_new=16,
+                             prefix_cache=True), cost_model=cm)
+            for _ in range(replicas)]
+        target = clients[0] if replicas == 1 else ReplicaPool(clients)
+        t0 = time.perf_counter()
+        hs = [target.submit(list(p), gp) for p in real_prompts]
+        toks = sum(len(h.result(timeout=300)) for h in hs)
+        wall = time.perf_counter() - t0
+        target.close()
+        return toks / wall
+
+    real_tok_per_s(1)                     # warm the compiled cells
+    r1, r2 = real_tok_per_s(1), real_tok_per_s(2)
+    section["real_engine"] = {
+        "requests": len(real_prompts), "gen_tokens": real_new,
+        "tok_per_s_1rep": r1, "tok_per_s_2rep": r2,
+        "devices": jax.device_count(),
+        "note": "single shared device; reported, not asserted"}
+    emit("replica_pool_real", 0.0,
+         f"1rep_{r1:.0f}_2rep_{r2:.0f}_tok_per_s")
+
+    payload["replica_pool"] = section
+
+
 def run(smoke: bool = False, prefix_mix: float = 0.75,
         sample_candidates: Optional[int] = None) -> dict:
     payload = {
-        "schema": "bench_serving/v8",
+        "schema": "bench_serving/v9",
         "mode": "smoke" if smoke else "full",
         "throughput": {},
         "kv_footprint": {},
@@ -994,6 +1175,9 @@ def run(smoke: bool = False, prefix_mix: float = 0.75,
 
     # ---- beyond-paper: observability cost + trace coverage ----
     bench_observability(payload)
+
+    # ---- beyond-paper: replica pool (cluster tier) ----
+    bench_replica_pool(payload, smoke)
 
     # ---- beyond-paper: straggler mitigation + multi-replica scaling ----
     wl = Workload(rate=100, duration=dur, len_min=2, len_max=100, seed=1)

@@ -32,6 +32,8 @@ def main() -> None:
     ap.add_argument("--num-requests", type=int, default=48)
     ap.add_argument("--rate", type=float, default=300.0)
     ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="replica count for the pool phase (1 skips it)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -174,6 +176,40 @@ def main() -> None:
     doc = client.save_trace("serve_e2e_trace.json")
     print(f"  exported {len(doc['traceEvents'])} Chrome-trace events -> "
           "serve_e2e_trace.json (load in Perfetto / chrome://tracing)")
+
+    # ---- phase 6: replica pool — same API, N engines, failover -------
+    if args.replicas < 2:
+        return
+    print(f"\nreplica pool: replicas={args.replicas} is just a "
+          "constructor knob on the same client API")
+    from repro.cluster import ReplicaFailure
+    pool = TurboClient.from_arch(args.arch, seq_buckets=(32, 64),
+                                 batch_buckets=(1, 2, 4), warmup=False,
+                                 prefix_cache=True,
+                                 replicas=args.replicas)
+    preamble = list(range(9, 9 + 16))             # shared system prompt
+    hs = [pool.submit(preamble + [70 + i],
+                      GenerationParams(max_new_tokens=6))
+          for i in range(4)]
+    hs += [pool.submit([90 + i] * 8, GenerationParams(max_new_tokens=6))
+           for i in range(2)]
+    print(f"  placements (same-preamble cohort sticks together): "
+          f"{[h.replica for h in hs]}")
+    victim = hs[0].replica
+    pool.kill_replica(victim, reason="demo kill")
+    done = lost = 0
+    for h in hs:
+        try:
+            h.result(timeout=300)
+            done += 1
+        except ReplicaFailure:
+            lost += 1
+    c = pool.metrics()["counters"]
+    print(f"  killed replica {victim}: {done} finished on siblings, "
+          f"{lost} lost mid-decode; affinity_hits="
+          f"{c['pool.affinity_hits']} failovers={c['pool.failovers']} "
+          f"resubmitted={c['pool.failover_resubmitted']}")
+    pool.close()
 
 
 if __name__ == "__main__":

@@ -200,22 +200,18 @@ class TurboClient:
                  config: Optional[PipelineConfig] = None,
                  clock: Optional[Callable[[], float]] = None,
                  auto_pump: Union[str, bool] = "sync",
-                 warmup: bool = False,
+                 warmup: Union[bool, str] = False,
                  trace: Union[bool, TraceRecorder] = False) -> None:
         if auto_pump not in ("sync", "thread", False):
             raise ValueError("auto_pump must be 'sync', 'thread' or "
                              f"False, got {auto_pump!r}")
+        if warmup not in (True, False, "background"):
+            raise ValueError("warmup must be True, False or "
+                             f"'background', got {warmup!r}")
         if clock is None:
             clock = getattr(backend, "clock", None) or time.monotonic
         self.clock = clock
         self.backend = backend
-        # AOT warmup at construction: compile every reachable tick /
-        # prefill variant before the first submit, so no request ever
-        # pays a first-hit JIT.  Opt-in here (tests build many cheap
-        # clients); from_arch defaults it ON.
-        self.warmup_stats: Optional[dict] = None
-        if warmup and hasattr(backend, "warmup_aot"):
-            self.warmup_stats = backend.warmup_aot()
         cost = cost_model if cost_model is not None \
             else AnalyticCostModel(**_DEFAULT_COST)
         # observability: metrics always on; tracing per `trace` (True
@@ -241,11 +237,33 @@ class TurboClient:
         self._closed = False
         self._pump_error: Optional[BaseException] = None
         self._pump_thread: Optional[threading.Thread] = None
+        # AOT warmup: compile every reachable tick / prefill variant so
+        # no request ever pays a first-hit JIT.  ``True`` warms eagerly
+        # at construction (~17 s on the smoke config); ``"background"``
+        # warms the same ladder on a daemon thread, yielding the client
+        # lock between rounds so early submits interleave with warming
+        # (`warmup_stats` reports progress).  Opt-in here (tests build
+        # many cheap clients); from_arch defaults it ON.
+        self.warmup_stats: Optional[dict] = None
+        if warmup and hasattr(backend, "warmup_aot"):
+            if warmup == "background":
+                self.warmup_stats = {"mode": "background", "done": False,
+                                     "rounds_completed": 0}
+            else:
+                self.warmup_stats = backend.warmup_aot()
+        self._warmup_thread: Optional[threading.Thread] = None
         if auto_pump == "thread":
             self._pump_thread = threading.Thread(
                 target=self._pump_loop, daemon=True,
                 name="turbo-client-pump")
             self._pump_thread.start()
+        # started last: the warmup thread takes `_cv`, so every other
+        # field must exist before it can observe the client
+        if warmup == "background" and hasattr(backend, "warmup_aot"):
+            self._warmup_thread = threading.Thread(
+                target=self._background_warmup, daemon=True,
+                name="turbo-client-warmup")
+            self._warmup_thread.start()
 
     # -- constructors ----------------------------------------------------
     @classmethod
@@ -258,52 +276,103 @@ class TurboClient:
                   config: Optional[PipelineConfig] = None,
                   init_seed: int = 0,
                   auto_pump: Union[str, bool] = "sync",
-                  warmup: bool = True,
+                  warmup: Union[bool, str] = True,
                   sample_candidates: Optional[int] = None,
                   trace: Union[bool, TraceRecorder] = False,
-                  **backend_kw) -> "TurboClient":
+                  replicas: int = 1,
+                  **backend_kw):
         """Build the whole serving stack from an arch name: reduced
         (``smoke=True``) or full config, fresh params, a bucketed
         InferenceEngine, and a paged-KV ContinuousEngine backend.
         ``warmup=True`` (default) AOT-compiles every reachable tick /
-        prefill variant before returning (``client.warmup_stats``)."""
+        prefill variant before returning (``client.warmup_stats``);
+        ``warmup="background"`` warms on a daemon thread instead.
+        ``replicas=N`` returns a `repro.cluster.ReplicaPool` of N such
+        stacks (weights initialised once and placed per replica —
+        sharded over ``jax.devices()`` when more than one is available)
+        behind the same submit/stream/cancel surface."""
         import jax
         from repro.configs import get_config, get_smoke_config
         from repro.models import init_params
         from repro.runtime.bucketing import BucketLadder
         from repro.runtime.engine import ContinuousEngine, InferenceEngine
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
         cfg = get_smoke_config(arch) if smoke else get_config(arch)
         params = init_params(cfg, jax.random.key(init_seed))
-        engine = InferenceEngine(cfg, params, ladder=BucketLadder(
-            seq_buckets=tuple(seq_buckets),
-            batch_buckets=tuple(batch_buckets)),
-            sample_candidates=sample_candidates)
-        backend = ContinuousEngine(engine, max_slots=max_slots,
-                                   cap_new=cap_new,
-                                   prefix_cache=prefix_cache,
-                                   **backend_kw)
-        return cls(backend, cost_model=cost_model, config=config,
-                   auto_pump=auto_pump, warmup=warmup, trace=trace)
+        devices = jax.devices()
+
+        def build_one(i: int) -> "TurboClient":
+            p = params if len(devices) == 1 \
+                else jax.device_put(params, devices[i % len(devices)])
+            engine = InferenceEngine(cfg, p, ladder=BucketLadder(
+                seq_buckets=tuple(seq_buckets),
+                batch_buckets=tuple(batch_buckets)),
+                sample_candidates=sample_candidates)
+            backend = ContinuousEngine(engine, max_slots=max_slots,
+                                       cap_new=cap_new,
+                                       prefix_cache=prefix_cache,
+                                       **backend_kw)
+            return cls(backend, cost_model=cost_model, config=config,
+                       auto_pump=auto_pump, warmup=warmup,
+                       trace=bool(trace))
+
+        if replicas == 1:
+            # single replica keeps the historical path (including a
+            # caller-supplied TraceRecorder)
+            engine = InferenceEngine(cfg, params, ladder=BucketLadder(
+                seq_buckets=tuple(seq_buckets),
+                batch_buckets=tuple(batch_buckets)),
+                sample_candidates=sample_candidates)
+            backend = ContinuousEngine(engine, max_slots=max_slots,
+                                       cap_new=cap_new,
+                                       prefix_cache=prefix_cache,
+                                       **backend_kw)
+            return cls(backend, cost_model=cost_model, config=config,
+                       auto_pump=auto_pump, warmup=warmup, trace=trace)
+        # lazy: repro.cluster imports nothing from repro.api, but keep
+        # the cluster tier out of the api import graph regardless
+        from repro.cluster import ReplicaPool
+        return ReplicaPool([build_one(i) for i in range(replicas)],
+                           trace=bool(trace))
 
     @classmethod
     def simulated(cls, cost_model: Optional[CostModel] = None,
                   sim_config=None,
                   auto_pump: Union[str, bool] = "sync",
-                  trace: Union[bool, TraceRecorder] = False
-                  ) -> "TurboClient":
+                  trace: Union[bool, TraceRecorder] = False,
+                  replicas: int = 1):
         """The same client API over the virtual-clock simulator backend
         — parity harness for scheduling/streaming/cancellation tests
-        with no model or device anywhere."""
-        from repro.core.simulator import (SimConfig, VirtualBackend,
-                                          VirtualClock)
+        with no model or device anywhere.  ``replicas=N`` returns a
+        `repro.cluster.ReplicaPool` of N independent virtual replicas
+        (each with its own clock; the pool drains them min-clock-first,
+        the same discipline `core.simulator.simulate` uses)."""
+        from repro.core.simulator import SimConfig, virtual_replica
         cfg = sim_config if sim_config is not None else SimConfig()
         cost = cost_model if cost_model is not None \
             else AnalyticCostModel(**_DEFAULT_COST)
-        clock = VirtualClock()
-        backend = VirtualBackend(cost, clock, lambda t: t, cfg, {}, [])
-        return cls(backend, cost_model=cost,
-                   config=cfg.pipeline_config(), clock=clock,
-                   auto_pump=auto_pump, trace=trace)
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        if replicas == 1:
+            backend, clock = virtual_replica(cost, cfg)
+            return cls(backend, cost_model=cost,
+                       config=cfg.pipeline_config(), clock=clock,
+                       auto_pump=auto_pump, trace=trace)
+        if auto_pump == "thread":
+            raise ValueError("replicas > 1 over the virtual clock is "
+                             "sync-driven; auto_pump='thread' would "
+                             "race the per-replica clocks")
+        from repro.cluster import ReplicaPool
+
+        def build_one() -> "TurboClient":
+            backend, clock = virtual_replica(cost, cfg)
+            return cls(backend, cost_model=cost,
+                       config=cfg.pipeline_config(), clock=clock,
+                       auto_pump=auto_pump, trace=bool(trace))
+
+        return ReplicaPool([build_one() for _ in range(replicas)],
+                           trace=bool(trace))
 
     # -- submission ------------------------------------------------------
     def submit(self, prompt: Sequence[int],
@@ -406,6 +475,67 @@ class TurboClient:
                     raise
                 self._cv.notify_all()
 
+    def _background_warmup(self) -> None:
+        """Daemon-thread body for ``warmup="background"``: run the
+        backend's AOT ladder under the client lock, but drop the lock at
+        every round boundary (the ``progress`` callback below) so
+        submits and ticks issued during warmup interleave instead of
+        blocking until the full ~17 s ladder completes."""
+
+        class _Aborted(Exception):
+            pass
+
+        def progress(rounds: int) -> None:
+            # nested function: it needs its own `with self._cv:` — and
+            # Condition.wait(0) releases every RLock recursion level, so
+            # callers blocked on the lock (submits, sync-mode handle
+            # waits) run right here.  Work they queued is then served to
+            # completion BEFORE the next warm round: warm rounds assume
+            # every engine slot is free, so the engine must be drained
+            # at each round boundary.
+            with self._cv:
+                if self._closed:
+                    raise _Aborted()
+                self.warmup_stats["rounds_completed"] = rounds
+                self._cv.notify_all()
+                self._cv.wait(0)
+                while not self.pipeline.idle():
+                    self.pipeline.tick()
+                    self._cv.notify_all()
+                if self._closed:
+                    raise _Aborted()
+
+        try:
+            with self._cv:
+                stats = self.backend.warmup_aot(progress=progress)
+                self.warmup_stats.update(stats)
+                self.warmup_stats["mode"] = "background"
+                self.warmup_stats["done"] = True
+                self._cv.notify_all()
+        except _Aborted:
+            with self._cv:
+                self.warmup_stats["aborted"] = True
+                self.warmup_stats["done"] = True
+                self._cv.notify_all()
+        except BaseException as exc:
+            with self._cv:
+                self.warmup_stats["error"] = repr(exc)
+                self.warmup_stats["done"] = True
+                self._cv.notify_all()
+
+    def wait_warmup(self, timeout: Optional[float] = None) -> dict:
+        """Block until background warmup finishes (no-op for eager or
+        disabled warmup); returns ``warmup_stats``."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while (self.warmup_stats is not None
+                   and not self.warmup_stats.get("done", True)):
+                if deadline is not None and time.monotonic() > deadline:
+                    raise RuntimeError(
+                        f"warmup not finished within {timeout}s")
+                self._cv.wait(0.05)
+            return dict(self.warmup_stats or {})
+
     # -- observability ---------------------------------------------------
     def metrics(self) -> dict:
         """Plain-dict snapshot of the serving stack's metrics registry
@@ -455,6 +585,10 @@ class TurboClient:
             self._cv.notify_all()
         if self._pump_thread is not None:
             self._pump_thread.join(timeout=2.0)
+        if self._warmup_thread is not None:
+            # aborts at its next round boundary (daemon: never blocks
+            # interpreter exit even if a compile is in flight)
+            self._warmup_thread.join(timeout=0.5)
 
     def __enter__(self) -> "TurboClient":
         return self

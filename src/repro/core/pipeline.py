@@ -1074,6 +1074,11 @@ class ServingPipeline:
     def idle(self) -> bool:
         return not self.queue and not self.live and not self.chunking
 
+    def depth(self) -> int:
+        """Live-session count — queued + mid-chunked-prefill + decoding.
+        The cluster tier's least-loaded router scores replicas on this."""
+        return len(self.queue) + len(self.chunking) + len(self.live)
+
     def drain(self) -> List[Session]:
         """Tick until nothing is queued or in flight.  Breaks instead of
         spinning when the pipeline can make no further progress: if a

@@ -629,6 +629,18 @@ class SimResult:
         return sum(v for _, v in self.kv_timeline) / len(self.kv_timeline)
 
 
+def virtual_replica(cost: CostModel,
+                    config: Optional[SimConfig] = None
+                    ) -> Tuple[VirtualBackend, VirtualClock]:
+    """One fresh simulator replica: a `VirtualBackend` over its own
+    `VirtualClock`, no straggler injection, private KV accounting.  The
+    building block `TurboClient.simulated(...)` (and its
+    ``replicas=N`` pool variant) assembles clients from."""
+    config = config if config is not None else SimConfig()
+    clock = VirtualClock()
+    return VirtualBackend(cost, clock, lambda t: t, config, {}, []), clock
+
+
 def simulate(workload: Workload, cost: CostModel,
              config: Optional[SimConfig] = None, *,
              trace: bool = False) -> SimResult:

@@ -62,7 +62,65 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="record the generative phase and export a "
                     "Chrome-trace JSON (Perfetto / chrome://tracing)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve the generative phase from a ReplicaPool "
+                    "of N engine replicas (prefix-affinity routing; the "
+                    "demo kills one replica mid-run to show failover)")
     return ap
+
+
+def run_pool_phase(engine, cost, args, cfg) -> None:
+    """Generative phase over a `repro.cluster.ReplicaPool`: same-prefix
+    cohorts land on one replica each, then one replica is killed mid-run
+    and its queued sessions fail over to the siblings."""
+    from repro.cluster import ReplicaFailure, ReplicaPool
+    from repro.runtime import ContinuousEngine
+    print(f"\nreplica pool: {args.gen_requests} requests over "
+          f"{args.replicas} replicas (prefix-affinity routing)")
+    clients = [TurboClient(
+        ContinuousEngine(engine, max_slots=8,
+                         cap_new=max(args.max_new_tokens, 1),
+                         prefix_cache=True),
+        cost_model=cost, trace=args.trace is not None)
+        for _ in range(args.replicas)]
+    pool = ReplicaPool(clients, trace=args.trace is not None)
+    gp = GenerationParams(max_new_tokens=args.max_new_tokens,
+                          temperature=args.temperature,
+                          top_k=args.top_k, top_p=args.top_p)
+    cohorts = max(2, args.replicas)
+    preambles = [[(11 * g + j) % cfg.vocab_size for j in range(16)]
+                 for g in range(cohorts)]
+    handles = [pool.submit(preambles[i % cohorts] + [1 + i % cohorts, i],
+                           gp) for i in range(args.gen_requests)]
+    placed = {}
+    for i, h in enumerate(handles):
+        placed.setdefault(i % cohorts, []).append(h.replica)
+    for g, reps in sorted(placed.items()):
+        print(f"  cohort {g}: replicas {sorted(set(reps))}")
+    victim = handles[0].replica
+    pool.kill_replica(victim, reason="demo kill")
+    print(f"  killed replica {victim} mid-run; queued sessions fail "
+          f"over, mid-decode ones surface ReplicaFailure")
+    ok = lost = 0
+    for h in handles:
+        try:
+            h.result(timeout=300)
+            ok += 1
+        except ReplicaFailure as e:
+            lost += 1
+            print(f"  req {e.req_id}: lost mid-decode on replica "
+                  f"{e.replica}")
+    c = pool.metrics()["counters"]
+    print(f"  {ok} finished / {lost} failed; routed={c['pool.routed']} "
+          f"affinity_hits={c['pool.affinity_hits']} "
+          f"failovers={c['pool.failovers']} "
+          f"resubmitted={c['pool.failover_resubmitted']}; healthy now: "
+          f"{pool.healthy_replicas()}")
+    if args.trace is not None:
+        doc = pool.save_trace(args.trace)
+        print(f"  trace: {len(doc['traceEvents'])} events -> "
+              f"{args.trace} (load in Perfetto / chrome://tracing)")
+    pool.close()
 
 
 def main() -> None:
@@ -110,6 +168,9 @@ def main() -> None:
           f"engine compiled {engine.compile_count} cells")
 
     # ---- generative streaming over the repro.api client --------------
+    if args.replicas > 1:
+        run_pool_phase(engine, cost, args, cfg)
+        return
     print(f"\nstreaming: {args.gen_requests} generative requests through "
           f"TurboClient (temperature={args.temperature})")
     client = TurboClient(

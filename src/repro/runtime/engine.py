@@ -734,6 +734,11 @@ class ContinuousEngine(PipelineBackend):
             # many slots' worth of blocks (up to max_len) while short
             # ones use few.  Pass num_blocks to size it explicitly.
         self.max_len = max_len      # contiguous: fixed at first prefill
+        # cluster-tier donation seam: forwarded onto the prefix cache's
+        # `on_insert` whenever the (lazily created) cache materializes,
+        # so a ReplicaPool can subscribe before the first prefill
+        self.on_prefix_insert: Optional[
+            Callable[[List[int], List[int]], None]] = None
         self.sessions: List[Optional[Session]] = [None] * max_slots
         self.state: Optional[GenState] = None
         # next KV write position per slot (mirrors device cache['len'];
@@ -1126,7 +1131,8 @@ class ContinuousEngine(PipelineBackend):
             s.generated = [int(x) for x in emitted[slot, :counts[slot]]]
 
     # -- AOT warmup ------------------------------------------------------
-    def warmup_aot(self) -> Dict[str, float]:
+    def warmup_aot(self, progress: Optional[Callable[[int], None]] = None
+                   ) -> Dict[str, float]:
         """Compile every reachable serving-path variant BEFORE the first
         request, so no client call ever pays a first-hit JIT on the
         serving path (the 3.7 s TTFT / 1.26 s ITL outliers in the
@@ -1154,6 +1160,13 @@ class ContinuousEngine(PipelineBackend):
         tick variants and canonical rounds warm.  Telemetry counters
         are saved/restored — warmup is invisible in serving stats.
         Returns ``{"compile_count", "warmup_seconds", "rounds"}``.
+
+        ``progress`` (if given) is called with the cumulative round
+        count after every warm round — the incremental-warmup seam: a
+        background-warming client yields its lock there so early
+        traffic interleaves between rounds, and may raise to abort the
+        remaining ladder (each round leaves the engine fully drained,
+        so aborting between rounds is always safe).
         """
         eng = self.engine
         ladder = eng.ladder
@@ -1165,6 +1178,13 @@ class ContinuousEngine(PipelineBackend):
         prefix_was, pc = self._prefix_enabled, self.prefix_cache
         self._prefix_enabled, self.prefix_cache = False, None
         rounds = 0
+
+        def _bump() -> None:
+            nonlocal rounds
+            rounds += 1
+            if progress is not None:
+                progress(rounds)
+
         try:
             self._ensure_state(top)
             seqs = [b for b in ladder.seq_buckets if b <= top]
@@ -1194,7 +1214,7 @@ class ContinuousEngine(PipelineBackend):
                         if bn * n > self.block_table.num_blocks - 1:
                             continue
                     self._warm_round(plen, budget, n, temperature=0.8)
-                    rounds += 1
+                    _bump()
             # greedy admissions per batch shape (budget 1: the eager
             # first-token argmax is the only cold piece left), then the
             # two decode-tick variants at already-warm prefill shapes
@@ -1202,11 +1222,11 @@ class ContinuousEngine(PipelineBackend):
             plen = max(seqs[0] - 3, 1)
             for n in sizes:
                 self._warm_round(plen, 1, n, temperature=0.0)
-                rounds += 1
+                _bump()
             n = min(2, self.max_slots)
             for temp in (0.0, 0.8):
                 self._warm_round(plen, 3, n, temperature=temp)
-                rounds += 1
+                _bump()
             if self.supports_packed_prefill():
                 # admission packs above warmed the prefix-free packed
                 # cells; chunk packs also gather each segment's own
@@ -1223,7 +1243,7 @@ class ContinuousEngine(PipelineBackend):
                 eng.prefill_packed_flat(
                     [[1] * bs, [2] * bs], [bs, bs], pre, pre, pre_seg,
                     pre_pos)
-                rounds += 1
+                _bump()
                 # admission rounds above packed n segments of ~bucket
                 # length each, landing in the LARGE pack buckets; real
                 # traffic also packs n tiny prompts into the smallest
@@ -1234,7 +1254,7 @@ class ContinuousEngine(PipelineBackend):
                 for n in sizes:
                     eng.prefill_packed_flat([[1]] * n, [0] * n, zero,
                                             zero, zseg, zseg)
-                    rounds += 1
+                    _bump()
         finally:
             # all warm rows are done; a fresh greedy admission must get
             # the pure-argmax tick back
@@ -1245,6 +1265,7 @@ class ContinuousEngine(PipelineBackend):
             if prefix_was:
                 self.prefix_cache = pc if pc is not None else \
                     RadixPrefixCache(self.block_table)
+                self.prefix_cache.on_insert = self.on_prefix_insert
         self.warmup_stats = {
             "compile_count": eng.compile_count - compiles0,
             "warmup_seconds": time.perf_counter() - t0,
@@ -1330,6 +1351,21 @@ class ContinuousEngine(PipelineBackend):
             raise ValueError("packed prefill requires kv_layout='paged' "
                              "with packed_prefill enabled")
         if not admissions and not chunks:
+            return
+        # the segment-id row caps at the ladder's top batch bucket; a
+        # group the scheduler composed past it (max_batch_size above the
+        # ladder, or a failover burst) splits into ladder-sized packs
+        cap = eng.ladder.batch_buckets[-1]
+        if len(admissions) + len(chunks) > cap:
+            work = [("a", s) for s in admissions] + \
+                [("c", c) for c in chunks]
+            for at in range(0, len(work), cap):
+                grp = work[at:at + cap]
+                last = at + cap >= len(work)
+                self.prefill_pack(
+                    [w for k, w in grp if k == "a"],
+                    [w for k, w in grp if k == "c"],
+                    decoding if last else None)
             return
         # ---- admission pre-checks (nothing mutated before they pass) --
         over = [s.req_id for s in admissions
@@ -1854,6 +1890,7 @@ class ContinuousEngine(PipelineBackend):
                         self.block_size)
                 if self._prefix_enabled and self.prefix_cache is None:
                     self.prefix_cache = RadixPrefixCache(self.block_table)
+                    self.prefix_cache.on_insert = self.on_prefix_insert
                 cache = make_paged_cache(
                     eng.cfg, B, self.block_table.num_blocks,
                     self.block_size, self.max_blocks, jnp.float32)

@@ -40,7 +40,7 @@ the block manager it sits on.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.runtime.kv_cache import BlockTableManager
 
@@ -112,6 +112,11 @@ class RadixPrefixCache:
         self.reused_tokens = 0
         self.inserted_blocks = 0
         self.evicted_blocks = 0
+        # cluster-tier donation hook: called as on_insert(tokens, new)
+        # after every insert that took fresh blocks, so a ReplicaPool's
+        # routing index learns which replica really caches which prefix
+        self.on_insert: Optional[Callable[[List[int], List[int]], None]] \
+            = None
 
     # -- internals -------------------------------------------------------
     def _tick(self) -> int:
@@ -251,6 +256,8 @@ class RadixPrefixCache:
                 new.append(bid)
             child.last_used = now
             node = child
+        if new and self.on_insert is not None:
+            self.on_insert(list(tokens), list(new))
         return new
 
     # -- eviction --------------------------------------------------------

@@ -152,6 +152,30 @@ def test_packed_tokens_identical_with_prefix_hits(engine):
     assert ce.pack_dispatches > 0
 
 
+def test_pack_wider_than_ladder_splits(engine):
+    """An admission group wider than the ladder's top batch bucket
+    (scheduler max_batch_size above it, or a failover burst) splits
+    into ladder-sized sub-packs instead of minting an impossible
+    segment bucket — tokens identical to isolated greedy runs."""
+    ce = ContinuousEngine(engine, max_slots=8, cap_new=16,
+                          kv_layout="paged", packed_prefill=True)
+    sys_ = ServingSystem(backend=ce, cost_model=CM,
+                         config=ServingConfig(policy="dp",
+                                              max_batch_size=8))
+    n = engine.ladder.batch_buckets[-1] + 2
+    prompts = [[9 + i] * 10 for i in range(n)]
+    sessions = [Session(i, 10, 0.0, prompt=list(p), max_new_tokens=6)
+                for i, p in enumerate(prompts)]
+    for s in sessions:
+        sys_.submit(s)
+    sys_.drain()
+    assert all(s.is_finished for s in sessions)
+    for s, p in zip(sessions, prompts):
+        want = list(engine.generate([p], max_new_tokens=6)[0])
+        assert list(p) + list(s.generated) == want
+    assert engine.kv_slab.live_bytes == 0
+
+
 def test_packed_sampled_rows_identical(engine):
     """Per-row seeded sampling is pack-composition invariant: the same
     (seed, step) stream lands on a session wherever it sits in the
